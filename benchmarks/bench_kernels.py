@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks (CPU wall-clock of the jnp oracle paths + the
+Pallas interpret path for validation; TPU timings come from the roofline)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.quantize.ref import quantize_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    q = jnp.asarray(rng.standard_normal((1, 8, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _time(fa, q, k, v)
+    flops = 4 * 256 * 256 * 8 * 64 / 2
+    rows.append({"name": "flash_attention_ref_b1h8s256",
+                 "us_per_call": us,
+                 "derived": f"gflops={flops/us/1e3:.2f}"})
+
+    x = jnp.asarray(rng.standard_normal((1, 512, 8, 32)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.standard_normal((1, 512, 8)), jnp.float32))
+    A = -jnp.abs(jnp.asarray(rng.standard_normal(8), jnp.float32))
+    B = jnp.asarray(rng.standard_normal((1, 512, 1, 16)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((1, 512, 1, 16)), jnp.float32)
+    ssd = jax.jit(lambda *a: ssd_scan_ref(*a, chunk=64)[0])
+    rows.append({"name": "ssd_scan_ref_l512h8",
+                 "us_per_call": _time(ssd, x, dt, A, B, C),
+                 "derived": "chunk=64"})
+
+    xr = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    sc = jnp.ones(1024, jnp.float32)
+    rows.append({"name": "rmsnorm_ref_4096x1024",
+                 "us_per_call": _time(jax.jit(rmsnorm_ref), xr, sc),
+                 "derived": f"gbps={(xr.nbytes*2)/_time(jax.jit(rmsnorm_ref), xr, sc)/1e3:.2f}"})
+
+    rows.append({"name": "quantize_ref_4096x1024",
+                 "us_per_call": _time(jax.jit(quantize_ref), xr),
+                 "derived": "int8+f32scales (4x DCN reduction)"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(r[k]) for k in ("name", "us_per_call", "derived")))

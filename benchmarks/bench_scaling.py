@@ -1,0 +1,101 @@
+"""Paper Table 1 / Fig 3 — data-parallel scaling with LMS+DDL.
+
+(a) Model-based: epoch time for qwen2.5-14b train_4k vs chip count
+    (16 -> 512), DDL hierarchical schedule; efficiency vs linear (paper:
+    98.5% @2, 95% @4, 87.3% @16).
+(b) Measured: real wall-clock of the smoke model's train step on 1 vs 8
+    host devices (same per-replica batch), CPU backend.
+"""
+import time
+
+import numpy as np
+
+from repro import hw as hwlib
+from repro.config.base import (MULTI_POD, SHAPES, SINGLE_POD, MeshSpec,
+                               LMSConfig)
+from repro.configs import get_config
+from repro.core.ddl.topology import ddl_allreduce_time
+from repro.core.lms.planner import layer_flops_dev, plan_memory
+
+ARCH = "qwen2.5-14b"
+
+
+def run():
+    cfg = get_config(ARCH)
+    hw = hwlib.TPU_V5E
+    shape = SHAPES["train_4k"]
+    grad_bytes = 4 * cfg.param_count() / 16  # f32, TP=16 shard
+    rows = []
+    base_time = None
+    for pods, data in [(1, 1), (1, 2), (1, 4), (1, 8), (1, 16), (2, 16)]:
+        chips = pods * data * 16
+        mesh = MeshSpec((pods, data, 16), ("pod", "data", "model"))
+        # per-replica compute shrinks with data; collective on the DP axes
+        compute = cfg.num_layers * layer_flops_dev(cfg, shape, mesh) * 3 \
+            / hw.peak_flops_bf16
+        coll = ddl_allreduce_time(grad_bytes, data=data, pods=pods)
+        step = compute + max(coll - 0.5 * compute, 0)  # bwd overlap half
+        if base_time is None:
+            base_time = step * chips  # chip-seconds at the base point
+        eff = base_time / (step * chips) * 100
+        rows.append({
+            "name": f"scaling_{chips}chips",
+            "us_per_call": step * 1e6,
+            "derived": f"efficiency={eff:.1f}% (paper: 95-98% in-node, "
+                       f"87.3% @16GPU)",
+        })
+    return rows
+
+
+def run_measured():
+    """Real 1-vs-8 device scaling of the smoke train step (CPU)."""
+    from tests.util import run_py  # reuse the subprocess helper
+    code = """
+import time, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.config.base import TrainConfig, ShapeConfig, MeshSpec, DDLConfig
+from repro.train.steps import build_train_step, init_train_state
+from repro.launch.mesh import make_mesh
+n = len(jax.devices())
+mesh_spec = MeshSpec((n, 1), ("data", "model"))
+mesh = make_mesh(mesh_spec)
+cfg = get_smoke_config("olmo-1b")
+model = Model(cfg, attn_impl="naive")
+shape = ShapeConfig("s", "train", 64, 4 * n)   # fixed per-replica batch
+tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
+                   ddl=DDLConfig(mode="allreduce"))
+fn, ssh, bsh = build_train_step(model, tcfg, mesh, donate=False)
+st = jax.device_put(init_train_state(model, tcfg, jax.random.key(0)), ssh)
+b = jax.device_put({"tokens": jnp.ones((4 * n, 64), jnp.int32),
+                    "labels": jnp.ones((4 * n, 64), jnp.int32)}, bsh)
+c = fn.lower(st, b).compile()
+st, m = c(st, b); jax.block_until_ready(m["loss"])
+t0 = time.perf_counter()
+for _ in range(3):
+    st, m = c(st, b)
+jax.block_until_ready(m["loss"])
+print("STEP_US", (time.perf_counter() - t0) / 3 * 1e6)
+"""
+    rows = []
+    try:
+        t1 = float(run_py(code, devices=1).split("STEP_US")[1].strip().split()[0])
+        t8 = float(run_py(code, devices=8).split("STEP_US")[1].strip().split()[0])
+        # 8x the work in t8/t1 the time => throughput scaling
+        eff = (t1 / t8) * 100 * 8
+        rows.append({"name": "scaling_measured_cpu_1to8dev",
+                     "us_per_call": t8,
+                     "derived": f"8x work in {t8/t1:.2f}x time = "
+                                f"{eff:.0f}% of linear — container has ONE "
+                                f"physical core, so ~12.5% is the ceiling; "
+                                f"this validates functional correctness, "
+                                f"not speed"})
+    except Exception as e:  # measured part is best-effort on 1 shared core
+        rows.append({"name": "scaling_measured_cpu_1to8dev",
+                     "us_per_call": 0, "derived": f"skipped: {e}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run() + run_measured():
+        print(",".join(str(r[k]) for k in ("name", "us_per_call", "derived")))

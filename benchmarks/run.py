@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig 1   -> bench_ddl_allreduce   (DDL vs flat all-reduce)
+  Fig 2b  -> bench_lms_overhead    (LMS overhead vs problem scale)
+  Tab 1/Fig 3 -> bench_scaling     (DP scaling, modeled + measured)
+  Tab 2 / s3.1 -> bench_accuracy_parity (convergence parity)
+  kernels -> bench_kernels         (hot-spot microbenchmarks)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ddl_allreduce, bench_kernels,
+                            bench_lms_overhead, bench_scaling)
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig1", bench_ddl_allreduce.run),
+        ("fig2b", bench_lms_overhead.run),
+        ("tab1", bench_scaling.run),
+        ("tab1m", bench_scaling.run_measured),
+        ("kern", bench_kernels.run),
+    ]
+    # accuracy parity spawns subprocesses — keep it last and optional
+    try:
+        from benchmarks import bench_accuracy_parity
+        modules.append(("tab2", bench_accuracy_parity.run))
+    except Exception:
+        pass
+    failures = 0
+    for tag, fn in modules:
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        except Exception as e:
+            failures += 1
+            print(f"{tag}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "olmo-1b", "--smoke", "--batch", "4",
+                   "--prompt-len", "32", "--gen", "16"]))

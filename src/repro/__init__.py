@@ -1,0 +1,5 @@
+"""repro — LMS x DDL: data-parallel training beyond device memory on TPU pods.
+
+Reproduction + extension of Matzek et al. (2018). See DESIGN.md.
+"""
+__version__ = "1.0.0"

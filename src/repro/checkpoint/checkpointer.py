@@ -1,0 +1,169 @@
+"""Sharded, asynchronous, atomic checkpointing with resharding restore.
+
+Layout:  <dir>/step_<N>/shard_<p>.npz  + manifest.json (committed LAST —
+the atomic commit point; a crash mid-save leaves no valid manifest and the
+previous checkpoint stays authoritative, which is what restart picks up).
+
+Resharding restore: arrays are saved with their global shape; on load they
+are re-placed under whatever mesh/shardings the *new* topology requests
+(elastic scaling after a failure: e.g. restart on a smaller data axis).
+Async: the serialize+write runs on a background thread; `wait()` joins it
+(double-buffered so training continues during the write — the paper-era
+"don't stall SGD on I/O").
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        if not tree:  # keep empty subtrees (e.g. non-parametric norms)
+            out[f"{prefix}__emptydict__"] = np.asarray(0)
+            return out
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "shape"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+        out[f"{prefix}__len__"] = np.asarray(len(tree))
+        out[f"{prefix}__type__"] = np.asarray(
+            1 if isinstance(tree, tuple) else 0)
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    # rebuild nested dict/list/tuple structure
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        if "__emptydict__" in node:
+            return {}
+        if "__len__" in node:
+            n = int(node["__len__"])
+            typ = int(node.get("__type__", 0))
+            items = [rebuild(node[str(i)]) for i in range(n)]
+            return tuple(items) if typ == 1 else items
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any], *, process: int = 0,
+             num_processes: int = 1, extra: Optional[dict] = None):
+        """state: pytree of arrays (jax or numpy) + nested dicts."""
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def _write():
+            step_dir = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = step_dir + f".tmp{process}"
+            os.makedirs(tmp, exist_ok=True)
+            flat = _flatten(host_state)
+            # npz can't hold ml_dtypes bfloat16: store a uint16 view + marker
+            enc = {}
+            for k, v in flat.items():
+                arr = np.asarray(v)
+                if arr.dtype.name == "bfloat16":
+                    enc["BF16::" + k] = arr.view(np.uint16)
+                else:
+                    enc[k] = arr
+            np.savez(os.path.join(tmp, f"shard_{process}.npz"), **enc)
+            if os.path.isdir(step_dir):
+                shutil.rmtree(step_dir)
+            os.rename(tmp, step_dir)
+            manifest = {"step": step, "time": time.time(),
+                        "num_processes": num_processes,
+                        "keys": sorted(flat.keys()), "extra": extra or {}}
+            mtmp = os.path.join(self.dir, f".manifest_{step}.tmp")
+            with open(mtmp, "w") as f:
+                json.dump(manifest, f)
+            os.rename(mtmp, os.path.join(step_dir, "manifest.json"))  # commit
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and \
+                    os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, shardings=None,
+                process: int = 0):
+        """-> (step, state, extra). With `shardings` (a matching pytree of
+        NamedSharding), arrays are device_put under the new mesh — the
+        elastic-reshard path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        step_dir = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(step_dir, f"shard_{process}.npz"),
+                     allow_pickle=False) as z:
+            import ml_dtypes
+            flat = {}
+            for k in z.files:
+                if k.startswith("BF16::"):
+                    flat[k[6:]] = z[k].view(ml_dtypes.bfloat16)
+                else:
+                    flat[k] = z[k]
+        state = _unflatten(flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                state, shardings,
+                is_leaf=lambda x: isinstance(x, np.ndarray))
+        return step, state, manifest.get("extra", {})

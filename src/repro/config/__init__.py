@@ -1,0 +1,10 @@
+from repro.config.base import (
+    ModelConfig, ShapeConfig, LMSConfig, DDLConfig, MeshSpec, TrainConfig,
+    SHAPES, SINGLE_POD, MULTI_POD, shape_applicable, smoke_shape, override,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "LMSConfig", "DDLConfig", "MeshSpec",
+    "TrainConfig", "SHAPES", "SINGLE_POD", "MULTI_POD", "shape_applicable",
+    "smoke_shape", "override",
+]

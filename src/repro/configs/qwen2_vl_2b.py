@@ -1,0 +1,28 @@
+"""Qwen2-VL-2B — VLM backbone (M-RoPE, dynamic resolution). [arXiv:2409.12191; hf]
+28L d_model=1536 12H (kv=2) d_ff=8960 vocab=151936. Vision frontend is a STUB:
+input_specs() provides precomputed patch/text embeddings + 3D position ids.
+"""
+from repro.config.base import ModelConfig
+
+ARCH_ID = "qwen2-vl-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="vlm",
+        num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2, head_dim=128,
+        d_ff=8960, vocab_size=151936,
+        qkv_bias=True, norm_type="rmsnorm", mlp_act="swiglu",
+        frontend="vision", mrope_sections=(16, 24, 24), tie_embeddings=True,
+        rope_theta=1_000_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        qkv_bias=True, norm_type="rmsnorm", mlp_act="swiglu",
+        frontend="vision", mrope_sections=(2, 3, 3), tie_embeddings=True,
+    )

@@ -1,0 +1,27 @@
+"""RecurrentGemma-9B — hybrid RG-LRU + local attention (pattern R,R,A).
+[arXiv:2402.19427; unverified] 38L d_model=4096 16H (kv=1, MQA) d_ff=12288
+vocab=256000, window=2048, lru_width=4096.
+"""
+from repro.config.base import ModelConfig
+
+ARCH_ID = "recurrentgemma-9b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="hybrid",
+        num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1, head_dim=256,
+        d_ff=12288, vocab_size=256000,
+        block_pattern=("rglru", "rglru", "local_attn"), window=2048, lru_width=4096,
+        norm_type="rmsnorm", mlp_act="geglu", tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="hybrid",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=256,
+        block_pattern=("rglru", "rglru", "local_attn"), window=16, lru_width=64,
+        norm_type="rmsnorm", mlp_act="geglu", tie_embeddings=True,
+    )

@@ -1,0 +1,27 @@
+"""Whisper-tiny — encoder-decoder audio transformer. [arXiv:2212.04356; unverified]
+4L enc + 4L dec, d_model=384 6H (kv=6) d_ff=1536 vocab=51865. Conv frontend is a
+STUB: input_specs() provides precomputed 1500-frame embeddings.
+"""
+from repro.config.base import ModelConfig
+
+ARCH_ID = "whisper-tiny"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="audio",
+        num_layers=4, d_model=384, num_heads=6, num_kv_heads=6, head_dim=64,
+        d_ff=1536, vocab_size=51865,
+        use_bias=True, norm_type="layernorm", norm_eps=1e-5, mlp_act="gelu",
+        frontend="audio", encoder_layers=4, encoder_seq=1500, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256,
+        use_bias=True, norm_type="layernorm", norm_eps=1e-5, mlp_act="gelu",
+        frontend="audio", encoder_layers=2, encoder_seq=16, tie_embeddings=True,
+    )

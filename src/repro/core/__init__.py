@@ -1,0 +1,2 @@
+"""Core paper contributions: LMS (tensor swapping / host-memory residency)
+and DDL (topology-aware hierarchical gradient reduction)."""

@@ -1,0 +1,14 @@
+from repro.core.ddl.allreduce import (ddl_reduce_tree, flat_allreduce,
+                                      hierarchical_allreduce_flat,
+                                      hierarchical_reduce_scatter_flat,
+                                      init_error_feedback, make_buckets,
+                                      pack, unpack, pack_spec)
+from repro.core.ddl.topology import (ddl_allreduce_time, flat_allreduce_time,
+                                     fabrics, AXIS_FABRIC)
+from repro.core.ddl.compress import compress, decompress, compressed_allreduce_pod
+
+__all__ = ["ddl_reduce_tree", "flat_allreduce", "hierarchical_allreduce_flat",
+           "hierarchical_reduce_scatter_flat", "init_error_feedback",
+           "make_buckets", "pack", "unpack", "pack_spec", "ddl_allreduce_time",
+           "flat_allreduce_time", "fabrics", "AXIS_FABRIC", "compress",
+           "decompress", "compressed_allreduce_pod"]

@@ -1,0 +1,78 @@
+"""Host-residency helpers: the explicit swap-out/swap-in side of LMS.
+
+`host_sharding(...)` builds pinned-host shardings for params / optimizer
+state / KV caches; `stream_to_device` / `stream_to_host` are the swap ops
+(XLA lowers them to async copy-start/copy-done on TPU, overlappable with
+compute); `residency_shardings` applies a MemoryPlan's residency map to a
+param-spec tree so jit in_shardings place each tensor in the right space.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+HOST = "pinned_host"
+DEVICE = "device"
+
+
+def effective_kind(kind):
+    """Memory-kind annotations in jit in/out_shardings crash the XLA:CPU
+    SPMD partitioner ("Side-effect HLO must have sharding"); they are a TPU
+    feature. Returns `kind` on TPU (or with REPRO_MEMORY_KINDS=1), else None
+    — host residency on CPU dry-runs is proven by the planner's analytic
+    model plus the device_put unit tests."""
+    import os
+
+    import jax
+    force = os.environ.get("REPRO_MEMORY_KINDS", "")
+    if force == "1":
+        return kind
+    if force == "0":
+        return None
+    return kind if jax.default_backend() == "tpu" else None
+
+
+def with_memory_kind(s: NamedSharding, kind: str) -> NamedSharding:
+    return s.with_memory_kind(kind)
+
+
+def host_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec, memory_kind=HOST)
+
+
+def device_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec, memory_kind=DEVICE)
+
+
+def stream_to_device(x, mesh: Mesh, spec: PartitionSpec):
+    """Swap-in: host -> HBM (inside jit; async on TPU)."""
+    return jax.device_put(x, device_sharding(mesh, spec))
+
+
+def stream_to_host(x, mesh: Mesh, spec: PartitionSpec):
+    """Swap-out: HBM -> host."""
+    return jax.device_put(x, host_sharding(mesh, spec))
+
+
+def residency_shardings(spec_tree, mesh: Mesh, residency: dict, *,
+                        group: str):
+    """Param-spec tree -> NamedSharding tree honoring a MemoryPlan residency.
+
+    group: which residency key governs this tree ("params", "optimizer",
+    "kvcache", "grads").
+    """
+    kind = HOST if residency.get(group, DEVICE) == "host" else DEVICE
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=kind), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def stream_layer_params(stacked_host_params, mesh: Mesh, spec_tree):
+    """Per-layer swap-in inside a lax.scan body: move one layer slice of a
+    host-stacked param tree into HBM. spec_tree holds the *unstacked* layer
+    specs."""
+    return jax.tree.map(
+        lambda x, s: stream_to_device(x, mesh, s), stacked_host_params, spec_tree,
+        is_leaf=lambda x: hasattr(x, "shape"))

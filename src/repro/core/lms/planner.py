@@ -1,0 +1,326 @@
+"""LMS memory planner — the analytic analogue of TFLMS's static graph
+analysis. Given (model config, shape, mesh, HBM budget) it sizes every
+tensor class on one device, models lifetimes across the layer schedule, and
+assigns each class to {save, offload, remat} plus a residency (device/host)
+for params, gradients, optimizer state and KV cache, so that the projected
+per-device peak fits the budget.
+
+Key deviation from TFLMS (documented in DESIGN.md §2): TFLMS always swapped;
+on TPU the host link is ~25x slower than HBM, so the planner offloads only
+when the swap is overlappable with a layer's compute
+(swap_time <= layer_compute_time) and prefers remat otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro import hw as hwlib
+from repro.config.base import LMSConfig, MeshSpec, ModelConfig, ShapeConfig
+
+
+@dataclass
+class TensorClass:
+    name: str
+    bytes_dev: int            # per-device bytes per layer instance
+    recompute_flops: float    # per-device FLOPs to rebuild one instance
+    per_layer: bool = True
+
+
+@dataclass
+class MemoryPlan:
+    assignment: Dict[str, str]          # activation name -> save|offload|remat
+    residency: Dict[str, str]           # params/grads/optimizer/kvcache -> device|host
+    peak_bytes: int                     # projected per-device HBM peak
+    host_bytes: int                     # projected per-device host usage
+    swap_bytes_per_step: int            # host<->device traffic per step (both dirs)
+    budget: int
+    fits: bool
+    notes: List[str] = field(default_factory=list)
+
+    def summary(self) -> str:
+        gb = 1024 ** 3
+        lines = [f"LMS plan: peak {self.peak_bytes/gb:.2f} GiB / budget "
+                 f"{self.budget/gb:.2f} GiB ({'fits' if self.fits else 'DOES NOT FIT'})",
+                 f"  host: {self.host_bytes/gb:.2f} GiB, swap/step: "
+                 f"{self.swap_bytes_per_step/gb:.2f} GiB",
+                 f"  residency: {self.residency}",
+                 f"  activations: {self.assignment}"]
+        lines += [f"  note: {n}" for n in self.notes]
+        return "\n".join(lines)
+
+
+def _axis_size(mesh: MeshSpec, name: str) -> int:
+    return dict(zip(mesh.axes, mesh.shape)).get(name, 1)
+
+
+def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
+    from repro.models.sharding import DEFAULT_RULES
+    rules = rules or DEFAULT_RULES
+    f = 1
+    for a in rules.get(logical, ()):
+        f *= _axis_size(mesh, a)
+    return f
+
+
+def activation_classes(cfg: ModelConfig, shape: ShapeConfig,
+                       mesh: MeshSpec) -> List[TensorClass]:
+    """Per-layer activation classes with per-device bytes (post-sharding)."""
+    dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+    tp = _axis_size(mesh, "model")
+    b = max(shape.global_batch // dp, 1)
+    s = shape.seq_len
+    d, f = cfg.d_model, cfg.d_ff
+    bs2 = b * s * 2  # bf16
+    out: List[TensorClass] = []
+    kinds = cfg.layer_kinds()
+    has_attn = any(k in ("attn", "local_attn") for k in kinds)
+    # residual stream + norms are unsharded across model
+    out.append(TensorClass("resid", bs2 * d, 0.0))
+    out.append(TensorClass("attn_norm" if has_attn else "ln_in", bs2 * d,
+                           2.0 * b * s * d))
+    if has_attn:
+        hq = (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+        out.append(TensorClass("qkv", bs2 * hq // tp, 2.0 * b * s * d * hq / tp))
+        out.append(TensorClass("attn_out", bs2 * hq // tp,
+                               4.0 * b * s * s * cfg.head_dim * cfg.num_heads / tp))
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        out.append(TensorClass("ssd_xz", bs2 * 2 * di // tp, 2.0 * b * s * d * 2 * di / tp))
+        nstate = cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state
+        nchunks = max(s // cfg.ssm_chunk, 1)
+        out.append(TensorClass("ssd_state", b * nchunks * nstate * 4 // tp,
+                               2.0 * b * s * di * cfg.ssm_state / tp))
+    if cfg.family == "hybrid":
+        w = cfg.lru_width or d
+        out.append(TensorClass("lru_h", bs2 * w // tp, 4.0 * b * s * w * w / tp))
+    if cfg.num_experts:
+        cap_rows = int(b * s * cfg.experts_per_token * cfg.moe_capacity_factor)
+        out.append(TensorClass("moe_hidden", cap_rows * f * 2 // tp,
+                               2.0 * cap_rows * d * f / tp))
+        out.append(TensorClass("router_probs", b * s * cfg.num_experts * 4,
+                               2.0 * b * s * d * cfg.num_experts))
+    elif cfg.family != "ssm":
+        gated = cfg.mlp_act in ("swiglu", "geglu")
+        mult = 3 if gated else 2  # g, u, h tagged together
+        out.append(TensorClass("mlp_hidden", mult * bs2 * f // tp,
+                               2.0 * mult * b * s * d * f / tp))
+        out.append(TensorClass("mlp_norm", bs2 * d, 2.0 * b * s * d))
+    return out
+
+
+def layer_flops_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec) -> float:
+    """Approx fwd FLOPs of one layer on one device."""
+    dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+    tp = _axis_size(mesh, "model")
+    tokens = max(shape.global_batch // dp, 1) * shape.seq_len
+    active = cfg.active_param_count() / max(cfg.num_layers, 1)
+    flops = 2.0 * tokens * active / tp
+    if cfg.num_heads:
+        w = cfg.window or shape.seq_len
+        flops += 4.0 * tokens * min(w, shape.seq_len) * cfg.num_heads * cfg.head_dim / tp
+    return flops
+
+
+def kv_cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                       rules=None) -> int:
+    dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+    tp = _axis_size(mesh, "model")
+    b = max(shape.global_batch // dp, 1)
+    # kv-head sharding only helps when heads divide the axis; the kv_seq
+    # rule (flash-decode split) shards the sequence dim instead
+    kvh_f = tp if cfg.num_kv_heads % max(tp, 1) == 0 else 1
+    seq_f = _logical_factor(mesh, "kv_seq", rules)
+    f = max(kvh_f, seq_f)
+    total = 0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            total += 2 * b * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * 2 // f
+        elif kind == "local_attn":
+            s = min(cfg.window, shape.seq_len)
+            total += 2 * b * s * cfg.num_kv_heads * cfg.head_dim * 2 // f
+        elif kind == "ssd":
+            total += b * cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4 // tp
+            total += b * (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state) * 2
+        elif kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            total += b * w * 4 // tp + b * 3 * w * 2
+    if cfg.is_encdec:
+        total += 2 * cfg.num_layers * max(shape.global_batch // dp, 1) * \
+            cfg.encoder_seq * max(cfg.num_kv_heads // tp, 1) * cfg.head_dim * 2
+    return total
+
+
+def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                lms: LMSConfig = LMSConfig(), hw: hwlib.HardwareSpec = hwlib.DEFAULT,
+                optimizer: str = "adamw", zero1: bool = False,
+                rules=None) -> MemoryPlan:
+    budget = (lms.hbm_budget or hw.hbm_bytes)
+    budget = int(budget * (1.0 - lms.workspace_frac))
+    tp = _axis_size(mesh, "model")
+    dp = _axis_size(mesh, "data")
+    notes: List[str] = []
+
+    n_params = cfg.param_count()
+    params_dev = 2 * n_params // tp                       # bf16, TP-sharded
+    opt_mult = 12 if optimizer == "adamw" else 4          # fp32 m+v+master / momentum
+    opt_dev = opt_mult * n_params // tp // (dp if zero1 else 1)
+    grads_dev = 2 * n_params // tp
+    residency = {"params": "device", "grads": "device",
+                 "optimizer": "device", "kvcache": "device"}
+
+    L = cfg.num_layers
+    lflops = layer_flops_dev(cfg, shape, mesh)
+    layer_time = lflops / hw.peak_flops_bf16
+    swap_per_step = 0
+
+    if shape.kind in ("prefill", "decode"):
+        # inference: no grads/optimizer; activations are transient.
+        # decode processes ONE token — size its activations at seq=1
+        act_shape = (dataclasses.replace(shape, seq_len=1)
+                     if shape.kind == "decode" else shape)
+        kv = kv_cache_bytes_dev(cfg, shape, mesh, rules=rules)
+        acts = activation_classes(cfg, act_shape, mesh)
+        transient = max((a.bytes_dev for a in acts), default=0) * 3
+        peak = params_dev + kv + transient
+        host = 0
+        if not lms.enabled:
+            return MemoryPlan({}, residency, peak, 0, 0, budget, peak <= budget,
+                              ["LMS disabled"])
+        if peak > budget and lms.offload_params != "never":
+            # stream params per layer: keep 2 layers resident
+            resident = 2 * params_dev // max(L, 1)
+            host += params_dev
+            swap_per_step += params_dev  # one full sweep per token/prefill
+            peak = resident + kv + transient
+            residency["params"] = "host"
+            notes.append("params host-resident, streamed per layer")
+        if peak > budget:
+            # offload KV cache, keep the working window
+            host += kv
+            swap_per_step += 2 * kv // max(L, 1)
+            peak = peak - kv + kv // max(L, 1)
+            residency["kvcache"] = "host"
+            notes.append("KV cache host-resident, streamed per layer")
+        return MemoryPlan({}, residency, int(peak), int(host),
+                          int(swap_per_step), budget, peak <= budget, notes)
+
+    # ---- training -----------------------------------------------------------
+    acts = activation_classes(cfg, shape, mesh)
+    assignment = {a.name: "save" for a in acts}
+    # resid is the scan carry: always materialized per layer
+    saved_bytes = lambda: L * sum(a.bytes_dev for a in acts
+                                  if assignment[a.name] == "save")
+    offload_bytes = lambda: L * sum(a.bytes_dev for a in acts
+                                    if assignment[a.name] == "offload")
+    transient = max((a.bytes_dev for a in acts), default=0) * 4
+
+    def fixed():
+        return params_dev + grads_dev + opt_dev + transient
+
+    host = 0
+    if lms.enabled:
+        # 1) optimizer to host if params+opt alone crowd the budget
+        if lms.offload_optimizer != "never" and \
+                fixed() + saved_bytes() > budget and opt_dev > budget // 4:
+            host += opt_dev
+            swap_per_step += 2 * (4 * n_params // tp // (dp if zero1 else 1))
+            opt_dev = 0
+            residency["optimizer"] = "host"
+            notes.append("optimizer state host-resident (ZeRO-Offload style)")
+        # 2) params to host (streamed per layer) when params alone ~exceed budget
+        if lms.offload_params != "never" and params_dev + grads_dev > budget // 2:
+            resident = 4 * params_dev // max(L, 1)   # 2 layers fwd + bwd prefetch
+            host += params_dev
+            swap_per_step += 2 * params_dev          # fwd sweep + bwd sweep
+            params_dev_eff = resident
+            residency["params"] = "host"
+            notes.append("params host-resident, streamed per layer (LMS swap)")
+            grads_host = grads_dev
+            host += grads_host
+            swap_per_step += grads_dev               # grads stream out in bwd
+            grads_dev_eff = 2 * grads_dev // max(L, 1)
+            residency["grads"] = "host"
+        else:
+            params_dev_eff, grads_dev_eff = params_dev, grads_dev
+
+        def peak_now():
+            return params_dev_eff + grads_dev_eff + opt_dev + transient + saved_bytes()
+
+        # 3) activations: greedy by bytes desc — offload if overlappable else
+        # remat. `resid` (the layer-input residual / scan carry) goes LAST:
+        # it cannot be rematerialized (rebuilding it means re-running every
+        # earlier layer), so its only escape is the swap — the paper's
+        # "first-layer tensors are the largest and longest-lived" case.
+        if lms.offload_activations != "never":
+            others = [a for a in acts if a.name != "resid"]
+            for a in sorted(others, key=lambda a: -a.bytes_dev):
+                if peak_now() <= budget:
+                    break
+                swap_time = 2 * a.bytes_dev / hw.host_bw
+                if swap_time <= layer_time:
+                    assignment[a.name] = "offload"
+                    host += L * a.bytes_dev
+                    swap_per_step += 2 * L * a.bytes_dev
+                elif lms.remat:
+                    assignment[a.name] = "remat"
+            # still over: remat everything rematerializable
+            if peak_now() > budget and lms.remat:
+                for a in others:
+                    if assignment[a.name] == "save":
+                        assignment[a.name] = "remat"
+            # last resort: swap the residual stream itself (LMS headline move)
+            if peak_now() > budget:
+                resid = next((a for a in acts if a.name == "resid"), None)
+                if resid is not None:
+                    assignment["resid"] = "offload"
+                    host += L * resid.bytes_dev
+                    swap_per_step += 2 * L * resid.bytes_dev
+        peak = peak_now()
+    else:
+        peak = fixed() + saved_bytes()
+        params_dev_eff = params_dev
+
+    return MemoryPlan(assignment, residency, int(peak), int(host),
+                      int(swap_per_step), budget, peak <= budget, notes)
+
+
+def hbm_traffic_model(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                      plan: MemoryPlan, optimizer: str = "adamw",
+                      rules=None) -> int:
+    """Analytic per-device HBM bytes per step assuming TPU-grade fusion —
+    the optimistic counterpart of the unfused-HLO `bytes accessed` number
+    (XLA:CPU counts every elementwise op's operands; a fused TPU kernel
+    streams each tensor once). Used as the fused-estimate memory term."""
+    tp = _axis_size(mesh, "model")
+    n = cfg.param_count()
+    params_dev = 2 * n // tp
+    if shape.kind == "train":
+        acts = activation_classes(cfg, shape, mesh)
+        L = cfg.num_layers
+        saved = L * sum(a.bytes_dev for a in acts
+                        if plan.assignment.get(a.name, "save") == "save")
+        # params read (fwd+bwd+remat) + grads f32 rw + opt state rw + acts rw
+        opt_mult = 24 if optimizer == "adamw" else 8
+        dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+        b = max(shape.global_batch // dp, 1)
+        logits = b * shape.seq_len * cfg.vocab_size // tp * 6
+        return int(3 * params_dev + 8 * n // tp + opt_mult * n // tp
+                   + 2 * saved + logits)
+    kv = kv_cache_bytes_dev(cfg, shape, mesh, rules=rules)
+    if shape.kind == "prefill":
+        acts = activation_classes(cfg, shape, mesh)
+        stream = cfg.num_layers * sum(a.bytes_dev for a in acts) * 2
+        return int(params_dev + kv + stream)
+    # decode: read every live parameter + the whole KV cache once
+    active_dev = 2 * cfg.active_param_count() // tp
+    return int(active_dev + kv)
+
+
+def plan_to_policy(plan: MemoryPlan):
+    """MemoryPlan -> jax.remat policy for the decoder scan body."""
+    from repro.core.lms.policies import build_policy
+    if not plan.assignment:
+        return None
+    return build_policy(plan.assignment)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataLoader, DataState, SyntheticTokens,
+                                 MMapTokens, make_vlm_batch, make_audio_batch)
+
+__all__ = ["DataLoader", "DataState", "SyntheticTokens", "MMapTokens",
+           "make_vlm_batch", "make_audio_batch"]

@@ -1,0 +1,57 @@
+"""Hardware model for the TARGET platform (TPU v5e pod) used by the LMS
+planner and the roofline analysis.
+
+The container executes on CPU; these constants describe the machine the
+compiled artifacts are *for*. All bandwidths are per-chip unless noted.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bytes: int              # usable HBM per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_link_bw: float          # bytes/s per ICI link (one direction)
+    ici_links: int              # links per chip participating in a 2D torus
+    dcn_bw: float               # bytes/s per chip across pods (data-center network)
+    host_bw: float              # bytes/s host<->device DMA (the "NVLink" analogue)
+    host_bytes: int             # host DRAM reachable per chip
+    vmem_bytes: int             # per-core VMEM (Pallas tiling budget)
+
+
+# TPU v5e (per problem statement: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    dcn_bw=6.25e9,
+    host_bw=32e9,
+    host_bytes=256 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+# The paper's platform, kept for the fidelity benchmarks (bench_lms_overhead):
+# IBM AC922, V100-16GB over NVLink 2.0 (3 bricks, ~75 GB/s/dir aggregated per GPU
+# in the 6-GPU config; 150 GB/s in the 4-GPU config) vs PCIe gen3 (~12 GB/s eff).
+V100_NVLINK = HardwareSpec(
+    name="v100-nvlink2",
+    peak_flops_bf16=125e12,          # V100 tensor-core fp16
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=900e9,
+    ici_link_bw=25e9, ici_links=6,   # GPU<->GPU NVLink
+    dcn_bw=12.5e9,                   # 100 Gb/s InfiniBand
+    host_bw=150e9,                   # CPU<->GPU NVLink 2.0 (the paper's enabler)
+    host_bytes=1024 * 1024**3,
+    vmem_bytes=96 * 1024,            # SM shared memory (unused; GPU analogue)
+)
+
+V100_PCIE = V100_NVLINK.__class__(
+    **{**V100_NVLINK.__dict__, "name": "v100-pcie3", "host_bw": 12e9}
+)
+
+DEFAULT = TPU_V5E

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three files: `kernel.py` (pl.pallas_call + BlockSpec VMEM
+tiling, TPU target), `ops.py` (jit'd dispatch wrapper), `ref.py` (pure-jnp
+oracle used for validation and as the XLA:CPU lowering path).
+
+Kernels: flash_attention (prefill/train attention), ssd_scan (Mamba-2 SSD),
+rmsnorm (fused norm), quantize (DDL DCN-hop int8 gradient compression).
+"""

@@ -1,0 +1,113 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the paper-era GPU flash algorithm: the online-softmax
+accumulators (m, l, acc) live in VMEM scratch and persist across the
+sequential kv-block grid dimension; q/k/v blocks are staged HBM->VMEM by
+BlockSpecs with MXU-aligned tiles (block sizes multiples of 128). GQA is
+expressed in the k/v index_map (kv head = q head * K // H) so grouped KV is
+never expanded in HBM.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv_blocks is the innermost,
+sequential ("arbitrary") dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, window: int, sm_scale: float,
+               block_q: int, block_k: int, seq_kv: int, seq_q: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                     # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    # positions: decode-style offset aligns q to the end of kv
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (seq_kv - seq_q if causal else 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                     # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    m_ref[...] = m_new
+    # zero padded kv rows: 0-prob * garbage-v would still poison the dot
+    v_valid = (ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)
+               ) < seq_kv
+    vb = jnp.where(v_valid, v_ref[0, 0].astype(jnp.float32), 0.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 256, block_k: int = 256,
+                        interpret: bool = False):
+    """q [B,H,Sq,D]; k,v [B,K,Skv,D]. Returns [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    sm_scale = 1.0 / math.sqrt(d)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, seq_kv=skv, seq_q=sq)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j, kh_=kh, h_tot=h:
+                         (b_, h_ * kh_ // h_tot, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j, kh_=kh, h_tot=h:
+                         (b_, h_ * kh_ // h_tot, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

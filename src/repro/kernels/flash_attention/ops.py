@@ -1,0 +1,36 @@
+"""jit'd public wrapper: dispatches to the Pallas kernel on TPU, to the pure
+jnp oracle elsewhere (XLA:CPU cannot lower TPU Pallas). Accepts the model's
+[B,S,H,D] layout and converts to the kernel's [B,H,S,D].
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _use_pallas() -> bool:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    """q [B,S,H,D]; k,v [B,Skv,K,D] (model layout). Returns [B,S,H,D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if _use_pallas() or interpret:
+        o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                                interpret=interpret or jax.default_backend() != "tpu")
+    else:
+        o = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)

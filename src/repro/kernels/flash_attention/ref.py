@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax attention
+with optional causal + sliding-window masking). GQA handled by head mapping:
+kv head of query head h is h * K // H.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,H,Sq,D]; k,v [B,K,Skv,D] (kernel layout: heads before seq)."""
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, sq, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None] + (k.shape[2] - sq if causal else 0)
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

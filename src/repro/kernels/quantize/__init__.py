@@ -1,0 +1,6 @@
+from repro.kernels.quantize.ops import quantize, dequantize
+from repro.kernels.quantize.kernel import quantize_fwd, dequantize_fwd
+from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
+
+__all__ = ["quantize", "dequantize", "quantize_fwd", "dequantize_fwd",
+           "quantize_ref", "dequantize_ref"]

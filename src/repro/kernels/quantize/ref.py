@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for symmetric per-row int8 quantization (DDL gradient
+compression for the DCN hop)."""
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x [rows, cols] float -> (q int8 [rows, cols], scale f32 [rows])."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale):
+    return q.astype(jnp.float32) * scale[:, None]

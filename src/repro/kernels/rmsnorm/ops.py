@@ -1,0 +1,22 @@
+import functools
+import os
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = False):
+    """x [..., d] -> same; fused on TPU, oracle elsewhere."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    use = force == "1" or (force != "0" and jax.default_backend() == "tpu")
+    if use or interpret:
+        o = rmsnorm_fwd(x2, scale, eps=eps,
+                        interpret=interpret or jax.default_backend() != "tpu")
+    else:
+        o = rmsnorm_ref(x2, scale, eps=eps)
+    return o.reshape(shape)

@@ -1,0 +1,6 @@
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_decode_step
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_decode_step_ref
+
+__all__ = ["ssd_scan", "ssd_decode_step", "ssd_scan_fwd", "ssd_scan_ref",
+           "ssd_decode_step_ref"]

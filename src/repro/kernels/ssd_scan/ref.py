@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the SSD (state-space duality) chunked scan — the
+Mamba-2 core. Semantics (per head, diagonal A):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t ⊗ B_t        (state update)
+    y_t = C_t · h_t                                          (readout)
+
+Chunked evaluation: quadratic attention-like intra-chunk term + linear
+inter-chunk state recurrence (scan over chunks), fp32 state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(m, h):
+    """[b,l,g,n] -> [b,l,h,n] by repeating groups."""
+    g = m.shape[2]
+    assert h % g == 0
+    return jnp.repeat(m, h // g, axis=2)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 256, h0=None):
+    """x [b,l,h,p]; dt [b,l,h] (post-softplus, >=0); A [h] (<0);
+    B,C [b,l,g,n]. Returns (y [b,l,h,p], h_final [b,h,p,n])."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // q
+
+    # chunked views, head axis before time-in-chunk: [b,nc,h,q,...]
+    xc = xf.reshape(b, nc, q, h, p).transpose(0, 1, 3, 2, 4)
+    dtc = dtf.reshape(b, nc, q, h).transpose(0, 1, 3, 2)
+    Bc = Bh.reshape(b, nc, q, h, n).transpose(0, 1, 3, 2, 4)
+    Cc = Ch.reshape(b, nc, q, h, n).transpose(0, 1, 3, 2, 4)
+
+    dA = dtc * Af[None, None, :, None]                       # [b,nc,h,q]
+    cum = jnp.cumsum(dA, axis=-1)                            # [b,nc,h,q]
+    # intra-chunk "attention": L[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[..., :, None] - cum[..., None, :]             # [b,nc,h,q,q]
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: exp of masked-out (positive) diffs overflows and
+    # poisons the backward pass through jnp.where
+    Lmat = jnp.exp(jnp.where(tril, diff, -jnp.inf))
+    scores = jnp.einsum("bchin,bchjn->bchij", Cc, Bc) * Lmat
+    xdt = xc * dtc[..., None]                                # [b,nc,h,q,p]
+    y_intra = jnp.einsum("bchij,bchjp->bchip", scores, xdt)
+
+    # chunk-final states: S_c = sum_i exp(cum_last - cum_i) * xdt_i ⊗ B_i
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)              # [b,nc,h,q]
+    S = jnp.einsum("bchi,bchip,bchin->bchpn", decay_to_end, xdt, Bc)
+    chunk_decay = jnp.exp(cum[..., -1])                      # [b,nc,h]
+
+    def body(hprev, inp):
+        S_c, dec_c = inp                                     # [b,h,p,n], [b,h]
+        hnew = hprev * dec_c[..., None, None] + S_c
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # [b,nc,h,p,n]
+
+    # inter-chunk readout: y_i += exp(cum_i) * C_i · h_{chunk_start}
+    y_inter = jnp.einsum("bchin,bchpn,bchi->bchip", Cc, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4).reshape(b, lp, h, p)[:, :l]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step_ref(h_state, x, dt, A, B, C):
+    """Single-token state update. h_state [b,h,p,n] fp32; x [b,h,p];
+    dt [b,h]; A [h]; B,C [b,g,n]. Returns (y [b,h,p], h_new)."""
+    hq = h_state.shape[1]
+    Bh = jnp.repeat(B, hq // B.shape[1], axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, hq // C.shape[1], axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32)[None])         # [b,h]
+    xdt = x.astype(jnp.float32) * dtf[..., None]             # [b,h,p]
+    h_new = h_state * dec[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from here — it sets XLA_FLAGS at
+import time and must only be imported as the program entry point.
+"""
+from repro.launch.mesh import (make_production_mesh, make_mesh,
+                               mesh_axis_sizes, dp_axes)
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_axis_sizes", "dp_axes"]

@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, print memory/cost analysis, and emit the roofline record.
+
+The two lines above MUST stay first: jax fixes the device count at first
+initialization, and the production meshes need 512 placeholder devices.
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+    python -m repro.launch.dryrun ... --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from dataclasses import replace as cfg_replace
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw as hwlib
+from repro.config.base import (SHAPES, SINGLE_POD, MULTI_POD, LMSConfig,
+                               DDLConfig, TrainConfig, shape_applicable)
+from repro.configs import ARCH_IDS, get_config
+from repro.core.lms.planner import plan_memory, hbm_traffic_model
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.roofline.analysis import (Roofline, parse_collectives,
+                                     model_flops_per_device, format_table)
+from repro.train.steps import (build_train_step, build_prefill_step,
+                               build_decode_step)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             ddl_mode: str = "allreduce", lms: bool = True,
+             attn_chunk: int = 512, unroll: bool = True,
+             kv_shard_seq: bool = False, seq_parallel: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh_spec = MULTI_POD if multi_pod else SINGLE_POD
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_spec.num_devices
+    model = Model(cfg, attn_impl="blockwise", attn_chunk=attn_chunk,
+                  unroll=unroll)
+    from repro.models.sharding import KV_SEQ_SHARDED_RULES, SEQ_PARALLEL_RULES
+    _rules = (KV_SEQ_SHARDED_RULES if kv_shard_seq
+              else SEQ_PARALLEL_RULES if seq_parallel else None)
+    plan = plan_memory(cfg, shape, mesh_spec,
+                       LMSConfig(enabled=lms),
+                       zero1=(ddl_mode == "zero1"), rules=_rules)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
+                               ddl=DDLConfig(mode=ddl_mode))
+            pshapes, _ = model.abstract_params(mesh)
+            f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            bspecs, _ = model.input_specs(shape, mesh)
+            if ddl_mode == "zero1":
+                from repro.train.steps import (Zero1State,
+                                               build_zero1_train_step)
+                step_fn, _, _, packspec = build_zero1_train_step(
+                    model, tcfg, mesh, plan=plan, donate=True)
+                flat = jax.ShapeDtypeStruct((packspec.padded,), jnp.float32)
+                state_abs = Zero1State(
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    params=pshapes, mu=flat, nu=flat, master=flat)
+            else:
+                step_fn, state_sh, batch_sh = build_train_step(
+                    model, tcfg, mesh, plan=plan, donate=True, rules=_rules)
+                from repro.train.steps import TrainState
+                from repro.optim.adamw import AdamState
+                state_abs = TrainState(
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    params=pshapes,
+                    opt=AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                                  mu=jax.tree.map(f32, pshapes),
+                                  nu=jax.tree.map(f32, pshapes),
+                                  master=jax.tree.map(f32, pshapes)))
+            lowered = step_fn.lower(state_abs, bspecs)
+        elif shape.kind == "prefill":
+            fn, _, _, _ = build_prefill_step(model, shape, mesh, plan=plan)
+            pshapes, _ = model.abstract_params(mesh)
+            bspecs, _ = model.input_specs(shape, mesh)
+            bspecs = {k: v for k, v in bspecs.items()
+                      if k not in ("pos", "labels")}
+            lowered = fn.lower(pshapes, bspecs)
+        else:  # decode
+            rules = _rules
+            fn, _, _, _ = build_decode_step(model, shape, mesh, plan=plan,
+                                            donate=True, rules=rules)
+            pshapes, _ = model.abstract_params(mesh)
+            cshapes, _ = model.cache_abstract(shape, mesh, rules=rules)
+            bspecs, _ = model.input_specs(shape, mesh)
+            pos = bspecs.pop("pos")
+            lowered = fn.lower(pshapes, cshapes, bspecs, pos)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    pod_stride = 256 if multi_pod else 0
+    colls = parse_collectives(hlo, pod_stride=pod_stride)
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    rl = Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        flops_dev=flops_dev, bytes_dev=bytes_dev,
+        ici_bytes_dev=float(colls.ici_bytes),
+        dcn_bytes_dev=float(colls.dcn_bytes),
+        swap_bytes_dev=float(plan.swap_bytes_per_step),
+        model_flops_dev=model_flops_per_device(cfg, shape, chips),
+        peak_hbm_dev=plan.peak_bytes,
+        bytes_model_dev=float(hbm_traffic_model(cfg, shape, mesh_spec, plan,
+                                                rules=_rules)),
+        notes="; ".join(plan.notes))
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": rl.mesh, "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes_xla": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        "planner": {"peak_bytes": plan.peak_bytes, "host_bytes": plan.host_bytes,
+                    "swap_bytes_per_step": plan.swap_bytes_per_step,
+                    "fits": plan.fits, "residency": plan.residency,
+                    "notes": plan.notes},
+        "cost_analysis": {"flops": flops_dev, "bytes_accessed": bytes_dev},
+        "collectives": {"ici_bytes": colls.ici_bytes,
+                        "dcn_bytes": colls.dcn_bytes,
+                        "by_kind": colls.by_kind(),
+                        "count": len(colls.ops)},
+        "roofline": rl.to_dict(),
+    }
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} x {shape_name} x {rl.mesh}] compile {t_compile:.0f}s | "
+              f"XLA temp {ma.temp_size_in_bytes/gb:.2f} GiB args "
+              f"{ma.argument_size_in_bytes/gb:.2f} GiB | planner peak "
+              f"{plan.peak_bytes/gb:.2f} GiB ({'fits' if plan.fits else 'OVER'}) | "
+              f"flops/dev {flops_dev:.2e} | ici {colls.ici_bytes/gb:.3f} GiB "
+              f"dcn {colls.dcn_bytes/gb:.3f} GiB | dominant {rl.dominant()}")
+        print(compiled.memory_analysis())
+    return rec
+
+
+def run_cell_extrapolated(arch: str, shape_name: str, *, multi_pod: bool = False,
+                          ddl_mode: str = "allreduce", lms: bool = True,
+                          attn_chunk: int = 512, seq_parallel: bool = False,
+                          verbose: bool = True) -> dict:
+    """Exact-cost dry-run for deep models without unrolling the full depth.
+
+    All decoder layers are identical, so per-layer HLO cost is the
+    difference of two reduced-depth *fully-unrolled* compiles:
+        unit = (U(k2) - U(k1)) / (k2 - k1)
+        total(L) = U(k1) + unit * (L - k1)
+    (linear in depth for flops / bytes-accessed / collective bytes; the
+    optimizer update is linear in stacked params, embeddings are in the
+    k-independent intercept). The full-depth config additionally gets a
+    ROLLED compile as the compile-success + memory_analysis proof.
+    Hybrid patterns use k = 1x and 2x the pattern period; remainder layers
+    are approximated by the pattern-average unit (noted in the record).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    period = max(len(cfg.block_pattern), 1)
+    k1, k2 = period, 3 * period
+    if cfg.num_layers <= k2:
+        return run_cell(arch, shape_name, multi_pod=multi_pod,
+                        ddl_mode=ddl_mode, lms=lms, attn_chunk=attn_chunk,
+                        unroll=True, verbose=verbose)
+
+    # 1) full-depth rolled compile: compile proof + memory analysis + planner
+    rec = run_cell(arch, shape_name, multi_pod=multi_pod, ddl_mode=ddl_mode,
+                   lms=lms, attn_chunk=attn_chunk, unroll=False,
+                   seq_parallel=seq_parallel, verbose=False)
+    if rec["status"] != "ok":
+        return rec
+
+    # 2) two reduced-depth unrolled compiles -> per-layer unit costs
+    metrics = {}
+    for k in (k1, k2):
+        sub = _compile_reduced(cfg, k, shape, multi_pod, ddl_mode, lms,
+                               attn_chunk, seq_parallel=seq_parallel)
+        if sub is None:
+            rec["status"] = "error"
+            rec["error"] = f"extrapolation compile failed at k={k}"
+            return rec
+        metrics[k] = sub
+    L = cfg.num_layers
+    extr = {}
+    for key in ("flops", "bytes", "ici", "dcn"):
+        unit = (metrics[k2][key] - metrics[k1][key]) / (k2 - k1)
+        extr[key] = metrics[k1][key] + unit * (L - k1)
+    plan = plan_memory(cfg, shape, MULTI_POD if multi_pod else SINGLE_POD,
+                       LMSConfig(enabled=lms), zero1=(ddl_mode == "zero1"))
+    chips = rec["chips"]
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=rec["mesh"], chips=chips,
+        flops_dev=extr["flops"], bytes_dev=extr["bytes"],
+        ici_bytes_dev=extr["ici"], dcn_bytes_dev=extr["dcn"],
+        swap_bytes_dev=float(plan.swap_bytes_per_step),
+        model_flops_dev=model_flops_per_device(cfg, shape, chips),
+        peak_hbm_dev=plan.peak_bytes,
+        bytes_model_dev=float(hbm_traffic_model(
+            cfg, shape, MULTI_POD if multi_pod else SINGLE_POD, plan)),
+        notes="extrapolated from k=%d,%d unrolled compiles" % (k1, k2))
+    rec["status"] = "ok"
+    rec["extrapolated"] = {"k1": k1, "k2": k2,
+                           "U1": metrics[k1], "U2": metrics[k2]}
+    rec["cost_analysis"] = {"flops": extr["flops"], "bytes_accessed": extr["bytes"]}
+    rec["collectives"] = {"ici_bytes": extr["ici"], "dcn_bytes": extr["dcn"],
+                          "by_kind": rec["collectives"]["by_kind"],
+                          "count": rec["collectives"]["count"]}
+    rec["roofline"] = rl.to_dict()
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] EXTRAPOLATED "
+              f"(k={k1},{k2}) flops/dev {extr['flops']:.2e} | "
+              f"ici {extr['ici']/gb:.2f} GiB dcn {extr['dcn']/gb:.3f} GiB | "
+              f"dominant {rl.dominant()}")
+    return rec
+
+
+def _compile_reduced(cfg, k, shape, multi_pod, ddl_mode, lms, attn_chunk,
+                     seq_parallel: bool = False):
+    """Compile a k-layer unrolled clone; return per-device cost metrics."""
+    sub_cfg = cfg_replace(cfg, num_layers=k)
+    mesh_spec = MULTI_POD if multi_pod else SINGLE_POD
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(sub_cfg, attn_impl="blockwise", attn_chunk=attn_chunk,
+                  unroll=True)
+    plan = plan_memory(sub_cfg, shape, mesh_spec, LMSConfig(enabled=lms),
+                       zero1=(ddl_mode == "zero1"))
+    try:
+        if shape.kind == "train":
+            tcfg = TrainConfig(model=sub_cfg, shape=shape, mesh=mesh_spec,
+                               ddl=DDLConfig(mode=ddl_mode))
+            step_fn, _, _ = build_train_step(model, tcfg, mesh, plan=plan,
+                                             donate=True)
+            pshapes, _ = model.abstract_params(mesh)
+            from repro.train.steps import TrainState
+            from repro.optim.adamw import AdamState
+            f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            state_abs = TrainState(
+                step=jax.ShapeDtypeStruct((), jnp.int32), params=pshapes,
+                opt=AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                              mu=jax.tree.map(f32, pshapes),
+                              nu=jax.tree.map(f32, pshapes),
+                              master=jax.tree.map(f32, pshapes)))
+            bspecs, _ = model.input_specs(shape, mesh)
+            compiled = step_fn.lower(state_abs, bspecs).compile()
+        elif shape.kind == "prefill":
+            fn, _, _, _ = build_prefill_step(model, shape, mesh, plan=plan)
+            pshapes, _ = model.abstract_params(mesh)
+            bspecs, _ = model.input_specs(shape, mesh)
+            bspecs = {kk: v for kk, v in bspecs.items()
+                      if kk not in ("pos", "labels")}
+            compiled = fn.lower(pshapes, bspecs).compile()
+        else:
+            fn, _, _, _ = build_decode_step(model, shape, mesh, plan=plan,
+                                            donate=True)
+            pshapes, _ = model.abstract_params(mesh)
+            cshapes, _ = model.cache_abstract(shape, mesh)
+            bspecs, _ = model.input_specs(shape, mesh)
+            pos = bspecs.pop("pos")
+            compiled = fn.lower(pshapes, cshapes, bspecs, pos).compile()
+    except Exception:
+        traceback.print_exc()
+        return None
+    ca = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text(),
+                              pod_stride=256 if multi_pod else 0)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "ici": float(colls.ici_bytes), "dcn": float(colls.dcn_bytes)}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--ddl-mode", default="allreduce",
+                   choices=["allreduce", "zero1", "none"])
+    p.add_argument("--no-lms", action="store_true")
+    p.add_argument("--attn-chunk", type=int, default=512)
+    p.add_argument("--extrapolate", action="store_true",
+                   help="per-layer cost extrapolation from two reduced-depth "
+                        "unrolled compiles + full-depth rolled compile proof")
+    p.add_argument("--seq-parallel", action="store_true",
+                   help="Megatron-style sequence parallelism for the "
+                        "residual stream (train)")
+    p.add_argument("--kv-shard-seq", action="store_true",
+                   help="shard decode KV caches over the model axis "
+                        "(flash-decode style partial-softmax reduction)")
+    p.add_argument("--no-unroll", action="store_true",
+                   help="keep layer scans rolled (faster compile, but "
+                        "cost_analysis counts the loop body once)")
+    p.add_argument("--out", default="")
+    args = p.parse_args(argv)
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.extrapolate:
+                    rec = run_cell_extrapolated(
+                        arch, shape, multi_pod=mp, ddl_mode=args.ddl_mode,
+                        lms=not args.no_lms, attn_chunk=args.attn_chunk,
+                        seq_parallel=args.seq_parallel)
+                else:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   ddl_mode=args.ddl_mode, lms=not args.no_lms,
+                                   attn_chunk=args.attn_chunk,
+                                   unroll=not args.no_unroll,
+                                   kv_shard_seq=args.kv_shard_seq,
+                                   seq_parallel=args.seq_parallel)
+                records.append(rec)
+                if rec["status"] == "error":
+                    print(f"[{arch} x {shape} x mp={mp}] ERROR: {rec['error']}",
+                          file=sys.stderr)
+                elif rec["status"] == "skipped":
+                    print(f"[{arch} x {shape}] skipped: {rec['reason']}")
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{args.arch}_{args.shape}_{'mp' if args.multi_pod else 'sp'}" \
+            if not args.both_meshes else f"{args.arch}_{args.shape}_both"
+        if args.extrapolate:
+            tag += "_ex"
+        path = os.path.join(args.out, f"dryrun_{tag}.json".replace("/", "_"))
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {path}")
+    ok_rows = [r["roofline"] for r in records if r.get("status") == "ok"]
+    if ok_rows:
+        print(format_table(ok_rows))
+    n_err = sum(1 for r in records if r["status"] == "error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Mesh construction. `make_production_mesh` is a FUNCTION so importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS before
+any jax initialization).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.config.base import MeshSpec, SINGLE_POD, MULTI_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(spec: MeshSpec):
+    return jax.make_mesh(spec.shape, spec.axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return {name: int(size) for name, size in mesh.shape.items()}
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,76 @@
+"""End-to-end training driver (the `ddlrun` analogue).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+        --steps 200 --batch 8 --seq 128 --mesh 1x1 --ddl-mode allreduce
+
+On the CPU container this trains reduced configs; on a pod the same driver
+takes --mesh 16x16 / --mesh 2x16x16 and the production arch ids.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, ShapeConfig,
+                               TrainConfig)
+from repro.configs import get_config, get_smoke_config
+from repro.train.trainer import Trainer
+
+
+def parse_mesh(s: str) -> MeshSpec:
+    dims = tuple(int(x) for x in s.split("x"))
+    if len(dims) == 3:
+        return MeshSpec(dims, ("pod", "data", "model"))
+    if len(dims) == 2:
+        return MeshSpec(dims, ("data", "model"))
+    return MeshSpec(dims, ("data",))
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced smoke config")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--mesh", default="1x1")
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--warmup", type=int, default=20)
+    p.add_argument("--ddl-mode", default="allreduce",
+                   choices=["allreduce", "zero1", "none"])
+    p.add_argument("--compress-dcn", action="store_true")
+    p.add_argument("--no-lms", action="store_true")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log", default="")
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(
+        model=cfg,
+        shape=ShapeConfig("cli", "train", args.seq, args.batch),
+        mesh=parse_mesh(args.mesh),
+        lms=LMSConfig(enabled=not args.no_lms),
+        ddl=DDLConfig(mode=args.ddl_mode, compress_dcn=args.compress_dcn),
+        learning_rate=args.lr, warmup_steps=args.warmup,
+        total_steps=args.steps, microbatches=args.microbatches,
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
+    trainer = Trainer(tcfg)
+
+    def log(step, m):
+        print(f"step {step:5d} | loss {m['loss']:.4f} | gnorm "
+              f"{m['grad_norm']:.3f} | lr {m['lr']:.2e} | {m['time_s']*1e3:.0f} ms")
+
+    state, hist = trainer.train(steps=args.steps, on_step=log)
+    if args.log:
+        with open(args.log, "w") as f:
+            json.dump(hist, f, indent=1)
+    print(f"final loss: {hist[-1]['loss']:.4f} (from {hist[0]['loss']:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,234 @@
+"""GQA attention: parameter defs, three interchangeable implementations
+(naive oracle / blockwise online-softmax / Pallas flash kernel), causal and
+local-window masking, and KV-cache decode paths.
+
+The blockwise implementation is the dry-run default: it never materializes
+the [S, S] score matrix (memory O(S·chunk)), matching the Pallas kernel's
+HBM traffic shape, and XLA:CPU can lower it (TPU Pallas cannot lower on CPU).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, apply_rope, apply_mrope
+from repro.models.sharding import constrain
+from repro.core.lms.policies import tag
+
+NEG_INF = -1e30
+
+
+def attention_defs(cfg, cross: bool = False):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale_out = 0.02 / math.sqrt(2 * cfg.num_layers)
+    bias = cfg.qkv_bias or cfg.use_bias
+    defs = {
+        "wq": ParamDef((d, h, hd), ("d_model", "heads", "head_dim")),
+        "wk": ParamDef((d, k, hd), ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, k, hd), ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "d_model"), scale=scale_out),
+    }
+    if bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((k, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((k, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.use_bias:
+        defs["bo"] = ParamDef((d,), ("d_model",), init="zeros")
+    return defs
+
+
+def project_qkv(cfg, p, x, kv_x=None):
+    """-> q [B,S,H,D], k/v [B,Skv,K,D]. kv_x!=None => cross attention."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # tag all three projections: saving/offloading them spares the backward
+    # pass from re-running the projection matmuls under remat
+    q = tag(constrain(q, "batch", "seq", "heads", None), "qkv")
+    k = tag(constrain(k, "batch", "seq", "kv_heads", None), "qkv")
+    v = tag(constrain(v, "batch", "seq", "kv_heads", None), "qkv")
+    return q, k, v
+
+
+def out_proj(cfg, p, o):
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return constrain(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Naive oracle (tests / tiny shapes)
+# ---------------------------------------------------------------------------
+
+def _gqa_expand(q, k_heads):
+    """[B,S,H,D] -> [B,S,K,G,D] grouped view for GQA einsums."""
+    b, s, h, d = q.shape
+    g = h // k_heads
+    return q.reshape(b, s, k_heads, g, d)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0, kv_len: Optional[jnp.ndarray] = None):
+    """q [B,Sq,H,D], k/v [B,Skv,K,D]. fp32 softmax. Exact oracle."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    qg = _gqa_expand(q, kh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return o.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style, pure jnp, scan over KV chunks)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        chunk: int = 512, q_offset: int = 0):
+    """Online-softmax over KV chunks; O(Sq·chunk) live memory. Matches
+    naive_attention to fp32-accumulation tolerance."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkc = k.shape[1] // chunk
+    qg = _gqa_expand(q, kh).astype(jnp.float32) / math.sqrt(d)
+    qpos = jnp.arange(sq) + q_offset
+
+    kc = k.reshape(b, nkc, chunk, kh, d)
+    vc = v.reshape(b, nkc, chunk, kh, d)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, cidx = inputs
+        kpos = cidx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb.astype(jnp.float32))
+        mask = jnp.ones((sq, chunk), bool)
+        mask &= (kpos[None, :] < skv)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nkc)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq, h, d)   # [B,K,G,Sq,D] -> [B,Sq,H,D]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-local attention (RecurrentGemma local_attn, train/prefill)
+# ---------------------------------------------------------------------------
+
+def local_block_attention(q, k, v, *, window: int, q_offset: int = 0):
+    """Exact sliding-window causal attention for window <= block size.
+    Queries in block i attend to keys in blocks {i-1, i}: O(S·2w) compute."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    w = window
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = q.shape[1]
+    nb = sp // w
+    g = h // kh
+    qb = q.reshape(b, nb, w, kh, g, d).astype(jnp.float32) / math.sqrt(d)
+    kb = k.reshape(b, nb, w, kh, d)
+    vb = v.reshape(b, nb, w, kh, d)
+    k2 = jnp.concatenate([jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0))), kb], axis=2)
+    v2 = jnp.concatenate([jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0))), vb], axis=2)
+    s_ = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb, k2.astype(jnp.float32))
+    qpos = jnp.arange(w)[:, None] + w                 # position within 2w context
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - w)         # [w, 2w] causal+window
+    # global key validity: first block's "previous" keys are padding
+    blk = jnp.arange(nb)[:, None]
+    kglob = blk * w + (jnp.arange(2 * w)[None, :] - w)   # [nb, 2w]
+    valid = (kglob >= 0) & (kglob < s)
+    full = mask[None, :, :] & valid[:, None, :]          # [nb, w, 2w]
+    s_ = jnp.where(full[None, :, None, None, :, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskd->bnqkgd", p.astype(v2.dtype), v2)
+    o = o.reshape(b, sp, h, d)[:, :s]
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
+    """q [B,1,H,D]; caches [B,Smax,K,D]; kv_len: scalar count of valid slots.
+    For window caches (ring buffers) validity is positional recency."""
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    smax = k_cache.shape[1]
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(smax)
+    mask = kpos < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              impl: str = "blockwise", chunk: int = 512, q_offset: int = 0):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if impl == "blockwise":
+        if window and not causal:
+            raise ValueError("window requires causal")
+        if window and q.shape[1] == k.shape[1]:
+            return local_block_attention(q, k, v, window=window, q_offset=q_offset)
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   chunk=chunk, q_offset=q_offset)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(impl)

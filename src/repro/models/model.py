@@ -1,0 +1,185 @@
+"""Public model API: `Model(cfg)` with init / loss / prefill / decode_step,
+abstract params + shardings for the dry-run, and per-arch `input_specs`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tr
+from repro.models.layers import (embed_defs, embed_tokens, lm_logits,
+                                 cross_entropy, norm_defs, apply_norm,
+                                 sinusoidal_positions, tree_init, tree_abstract,
+                                 ParamDef)
+from repro.models.sharding import constrain, prune_spec, spec as mkspec
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "blockwise",
+                 attn_chunk: int = 512, ssd_impl: str = "ref",
+                 unroll: bool = False):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.attn_chunk = attn_chunk
+        self.ssd_impl = ssd_impl
+        self.unroll = unroll
+
+    # ---- params ----------------------------------------------------------
+    def param_defs(self):
+        cfg = self.cfg
+        defs = {"embed": embed_defs(cfg),
+                "decoder": tr.decoder_defs(cfg),
+                "final_norm": norm_defs(cfg, cfg.d_model)}
+        if cfg.is_encdec:
+            defs["encoder"] = tr.encoder_defs(cfg)
+        return defs
+
+    def init(self, rng):
+        return tree_init(rng, self.param_defs())
+
+    def abstract_params(self, mesh=None, rules=None):
+        return tree_abstract(self.param_defs(), mesh=mesh, rules=rules)
+
+    # ---- inputs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, mesh=None, rules=None):
+        """ShapeDtypeStruct stand-ins + PartitionSpecs for every model input
+        of the given shape. No device allocation."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sd = jax.ShapeDtypeStruct
+        bspec = mkspec("batch", mesh=mesh, rules=rules)
+
+        def tok(bb, ss):
+            return sd((bb, ss), jnp.int32)
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                specs = {"embeds": sd((b, s, cfg.d_model), jnp.bfloat16),
+                         "positions3": sd((3, b, s), jnp.int32),
+                         "labels": tok(b, s)}
+                shards = {"embeds": mkspec("batch", None, None, mesh=mesh, rules=rules),
+                          "positions3": mkspec(None, "batch", None, mesh=mesh, rules=rules),
+                          "labels": bspec}
+            elif cfg.family == "audio":
+                specs = {"enc_embeds": sd((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+                         "tokens": tok(b, s), "labels": tok(b, s)}
+                shards = {"enc_embeds": mkspec("batch", None, None, mesh=mesh, rules=rules),
+                          "tokens": bspec, "labels": bspec}
+            else:
+                specs = {"tokens": tok(b, s), "labels": tok(b, s)}
+                shards = {"tokens": bspec, "labels": bspec}
+            shards = {k: prune_spec(specs[k].shape, v, mesh)
+                      for k, v in shards.items()}
+            return specs, shards
+
+        # decode: one new token against a cache of length s
+        if cfg.family == "vlm":
+            specs = {"embeds": sd((b, 1, cfg.d_model), jnp.bfloat16),
+                     "positions3": sd((3, b, 1), jnp.int32)}
+            shards = {"embeds": mkspec("batch", None, None, mesh=mesh, rules=rules),
+                      "positions3": mkspec(None, "batch", None, mesh=mesh, rules=rules)}
+        else:
+            specs = {"tokens": tok(b, 1)}
+            shards = {"tokens": bspec}
+        shards = {k: prune_spec(specs[k].shape, v, mesh) for k, v in shards.items()}
+        specs["pos"] = sd((), jnp.int32)
+        shards["pos"] = mkspec(mesh=mesh, rules=rules)
+        return specs, shards
+
+    def cache_abstract(self, shape: ShapeConfig, mesh=None, rules=None):
+        defs = tr.cache_defs(self.cfg, shape.global_batch, shape.seq_len)
+        return tree_abstract(defs, mesh=mesh, rules=rules)
+
+    def init_cache(self, batch: int, cache_len: int):
+        defs = tr.cache_defs(self.cfg, batch, cache_len)
+        is_def = lambda x: isinstance(x, ParamDef)
+        return jax.tree.map(
+            lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), defs, is_leaf=is_def)
+
+    # ---- context ---------------------------------------------------------
+    def _ctx(self, batch: Dict, seq: int, pos=None):
+        cfg = self.cfg
+        ctx = {"attn_impl": self.attn_impl, "attn_chunk": self.attn_chunk,
+               "ssd_impl": self.ssd_impl}
+        if cfg.family == "vlm":
+            ctx["positions3"] = batch["positions3"]
+        else:
+            if pos is None:
+                positions = jnp.arange(seq)[None, :]
+            else:
+                positions = jnp.full((1, 1), 0, jnp.int32) + pos
+            ctx["positions"] = positions
+        return ctx
+
+    def _embed_in(self, params, batch, *, decode=False):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            x = batch["embeds"]
+        else:
+            x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        return x
+
+    # ---- train forward ----------------------------------------------------
+    def forward(self, params, batch, *, policy=None, no_remat=False):
+        """-> (logits [B,S,V], aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        seq = x.shape[1]
+        ctx = self._ctx(batch, seq)
+        if cfg.is_encdec:
+            enc = batch["enc_embeds"] + sinusoidal_positions(
+                cfg.encoder_seq, cfg.d_model).astype(x.dtype)[None]
+            ctx["enc_out"] = tr.apply_encoder(cfg, params["encoder"], enc, ctx)
+            x = x + sinusoidal_positions(seq, cfg.d_model).astype(x.dtype)[None]
+        x, aux = tr.apply_decoder(cfg, params["decoder"], x, ctx,
+                                  policy=policy, no_remat=no_remat,
+                                  unroll=self.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        return lm_logits(cfg, params["embed"], x), aux
+
+    def loss(self, params, batch, *, policy=None, no_remat=False,
+             aux_weight: float = 0.01):
+        logits, aux = self.forward(params, batch, policy=policy, no_remat=no_remat)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """-> (last-token logits [B,V], cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        seq = x.shape[1]
+        cache_len = cache_len or seq
+        ctx = self._ctx(batch, seq)
+        if cfg.is_encdec:
+            enc = batch["enc_embeds"] + sinusoidal_positions(
+                cfg.encoder_seq, cfg.d_model).astype(x.dtype)[None]
+            ctx["enc_out"] = tr.apply_encoder(cfg, params["encoder"], enc, ctx)
+            x = x + sinusoidal_positions(seq, cfg.d_model).astype(x.dtype)[None]
+        x, cache, _ = tr.apply_decoder_prefill(cfg, params["decoder"], x, ctx,
+                                               cache_len, unroll=self.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, batch, pos):
+        """batch: {"tokens" [B,1]} (or vlm embeds); pos: scalar int32.
+        -> (logits [B,V], new_cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch, decode=True)
+        ctx = self._ctx(batch, 1, pos=pos)
+        if cfg.is_encdec:
+            from repro.models.layers import sinusoidal_row
+            x = x + sinusoidal_row(pos, cfg.d_model).astype(x.dtype)[None, None]
+        x, new_cache = tr.apply_decoder_decode(cfg, params["decoder"], cache, x,
+                                               pos, ctx, unroll=self.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits[:, 0], new_cache
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is sort/scatter based (no [T, E, C] one-hot): assignments are ranked
+within their expert via a stable argsort, overflow beyond capacity is dropped
+(standard capacity-factor semantics), tokens are scattered into an
+[E, C, d] buffer whose expert axis is sharded over `model` (expert
+parallelism), and expert matmuls run as batched einsums. FLOPs scale with
+T * k * capacity_factor, not with E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+from repro.models.sharding import constrain
+from repro.core.lms.policies import tag
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamDef((d, e), ("d_model", None), dtype="float32"),
+        "w_gate": ParamDef((e, d, f), ("experts", "d_model", "ff")),
+        "w_up": ParamDef((e, d, f), ("experts", "d_model", "ff")),
+        "w_down": ParamDef((e, f, d), ("experts", "ff", "d_model")),
+    }
+
+
+def _capacity(cfg, tokens: int) -> int:
+    cap = int(tokens * cfg.experts_per_token * cfg.moe_capacity_factor
+              / cfg.num_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+def apply_moe(cfg, p, x):
+    """x [B,S,d] -> ([B,S,d], aux_loss scalar f32)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+    cap = _capacity(cfg, t)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = tag(probs, "router_probs")
+    top_w, top_i = jax.lax.top_k(probs, k)                   # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                  # [E]
+    one_hot_top1 = jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # rank assignments within their expert (stable sort; no T*E one-hot)
+    flat_e = top_i.reshape(-1)                               # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    ranks_sorted = jnp.arange(t * k) - offsets[flat_e[order]]
+    ranks = jnp.zeros(t * k, jnp.int32).at[order].set(ranks_sorted.astype(jnp.int32))
+    keep = ranks < cap
+
+    # scatter straight into the [E, C, d] expert-major buffer so the expert
+    # dim is born sharded (a flat [E*C, d] scatter makes GSPMD materialize
+    # the buffer replicated — hundreds of GB of all-gathers at 128 experts)
+    safe_rank = jnp.where(keep, ranks, cap - 1)
+    # NOTE (§Perf H3 it2, refuted): constraining these rows over `model` to
+    # coax an all-to-all dispatch made collectives slightly WORSE (21.4s vs
+    # 20.1s) — GSPMD still gathers; a true a2a needs explicit shard_map
+    # dispatch (future work).
+    contrib = xf[flat_t] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_rank].add(contrib, mode="drop")
+    gathered = constrain(buf, "experts", None, None)
+
+    # expert FFN (gated)
+    g = jnp.einsum("ecd,edf->ecf", gathered, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", gathered, p["w_up"])
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    h = act(g) * u
+    h = tag(constrain(h, "experts", None, "ff"), "moe_hidden")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # [E, C, d]
+    out_e = constrain(out_e, "experts", None, None)
+
+    # combine back: expert-major gather + weighted segment-sum over tokens
+    picked = out_e[flat_e, safe_rank] * (flat_w * keep)[:, None].astype(x.dtype)
+    y = jax.ops.segment_sum(picked, flat_t, num_segments=t)
+    return constrain(y.reshape(b, s, d), "batch", "seq", None), aux
+
+
+def apply_moe_dense_fallback(cfg, p, x):
+    """Every expert on every token (oracle for tests; E/k x the FLOPs)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    g = jnp.einsum("td,edf->tef", xf, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+    h = act(g) * u
+    out_e = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    w_full = jnp.zeros((xf.shape[0], e), jnp.float32)
+    w_full = jax.vmap(lambda wrow, irow, vrow: wrow.at[irow].set(vrow))(
+        w_full, top_i, top_w)
+    y = jnp.einsum("te,ted->td", w_full.astype(x.dtype), out_e)
+    return y.reshape(b, s, d)

@@ -1,0 +1,94 @@
+"""RecurrentGemma / Griffin recurrent block: linear x-branch -> causal conv1d
+(width 4) -> RG-LRU, gated by a GeLU branch. Train/prefill evaluates the LRU
+with an associative scan (O(L log L) depth, sub-quadratic memory); decode is
+a single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+from repro.models.sharding import constrain
+from repro.core.lms.policies import tag
+
+_C = 8.0  # RG-LRU temperature (Griffin's c)
+
+
+def rglru_defs(cfg):
+    d, w = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    return {
+        "w_gate_branch": ParamDef((d, w), ("d_model", "lru")),
+        "w_x_branch": ParamDef((d, w), ("d_model", "lru")),
+        "conv_w": ParamDef((4, w), ("conv", "lru"), scale=0.1),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "w_input_gate": ParamDef((w, w), (None, "lru")),
+        "b_input_gate": ParamDef((w,), ("lru",), init="zeros"),
+        "w_rec_gate": ParamDef((w, w), (None, "lru")),
+        "b_rec_gate": ParamDef((w,), ("lru",), init="zeros"),
+        "Lambda": ParamDef((w,), ("lru",), init="lru_lambda", dtype="float32"),
+        "w_out": ParamDef((w, d), ("lru", "d_model")),
+    }
+
+
+def _causal_conv(u, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :] for i in range(k)) + b
+
+
+def _lru_gates(p, u):
+    """-> (log_a [.., w] f32, gated input [.., w] f32)."""
+    uf = u.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(uf @ p["w_input_gate"].astype(jnp.float32) + p["b_input_gate"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32) + p["b_rec_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r_gate
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = uf * i_gate * jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, x_in
+
+
+def apply_rglru(cfg, p, x):
+    """x [B,L,d] -> [B,L,d]."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    u = _causal_conv(x @ p["w_x_branch"], p["conv_w"], p["conv_b"])
+    log_a, x_in = _lru_gates(p, u)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2_, b2 = c2
+        return a1 * a2_, b1 * a2_ + b2
+
+    h = jax.lax.associative_scan(combine, (a, x_in), axis=1)[1]
+    h = tag(constrain(h.astype(x.dtype), "batch", "seq", "lru"), "lru_h")
+    out = (h * gate) @ p["w_out"]
+    return constrain(out, "batch", "seq", None)
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), dtype),
+    }
+
+
+def rglru_cache_defs(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": ParamDef((batch, w), ("batch", "lru"), init="zeros", dtype="float32"),
+        "conv": ParamDef((batch, 3, w), ("batch", None, "lru"), init="zeros"),
+    }
+
+
+def decode_rglru(cfg, p, x, cache):
+    """x [B,1,d] -> (out [B,1,d], new cache)."""
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_branch"])
+    u_t = x[:, 0] @ p["w_x_branch"]
+    hist = jnp.concatenate([cache["conv"], u_t[:, None]], axis=1)   # [B,4,w]
+    u = jnp.einsum("bkw,kw->bw", hist, p["conv_w"]) + p["conv_b"]
+    log_a, x_in = _lru_gates(p, u)
+    h = cache["h"] * jnp.exp(log_a) + x_in
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}

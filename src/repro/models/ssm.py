@@ -1,0 +1,120 @@
+"""Mamba-2 block (SSD). Train/prefill uses the chunked SSD scan (Pallas
+kernel on TPU, jnp oracle elsewhere); decode is a single-token state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, gated_rmsnorm
+from repro.models.sharding import constrain
+from repro.core.lms.policies import tag
+from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_decode_step_ref
+
+
+def ssm_defs(cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj_z": ParamDef((d, di), ("d_model", "d_inner")),
+        "in_proj_x": ParamDef((d, di), ("d_model", "d_inner")),
+        "in_proj_bc": ParamDef((d, 2 * g * n), ("d_model", None)),
+        "in_proj_dt": ParamDef((d, nh), ("d_model", "ssm_heads")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), ("conv", None), scale=0.1),
+        "conv_b": ParamDef((conv_ch,), (None,), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="ssm_a", dtype="float32"),
+        "D": ParamDef((nh,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "norm": {"scale": ParamDef((di,), ("d_inner",), init="ones", dtype="float32")},
+        "out_proj": ParamDef((di, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_conv(u, w, b):
+    """u [B,L,C]; w [K,C] depthwise causal; b [C]."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b
+
+
+def _split_proj(cfg, p, x):
+    z = x @ p["in_proj_z"]
+    xr = x @ p["in_proj_x"]
+    bc = x @ p["in_proj_bc"]
+    dt_raw = x @ p["in_proj_dt"]
+    return z, xr, bc, dt_raw
+
+
+def apply_ssm(cfg, p, x, *, ssd_impl="ref"):
+    """x [B,L,d] -> [B,L,d] (train / prefill). Returns (out, final_states)."""
+    b, l, d = x.shape
+    di, g, n, nh, hd = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    z, xr, bc, dt_raw = _split_proj(cfg, p, x)
+    z = tag(constrain(z, "batch", "seq", "d_inner"), "ssd_xz")
+    conv_in = jnp.concatenate([xr, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xr, bc = conv_out[..., :di], conv_out[..., di:]
+    B = bc[..., : g * n].reshape(b, l, g, n)
+    C = bc[..., g * n:].reshape(b, l, g, n)
+    xh = xr.reshape(b, l, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if ssd_impl == "pallas":
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y = ssd_scan(xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+        h_final = None
+    else:
+        y, h_final = ssd_scan_ref(xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+    y = tag(constrain(y.reshape(b, l, di), "batch", "seq", "d_inner"), "ssd_state")
+    y = (y + (xh * p["D"][None, None, :, None]).reshape(b, l, di)).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z, eps=cfg.norm_eps)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return constrain(out, "batch", "seq", None), h_final
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * g * n
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssm_cache_defs(cfg, batch: int):
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * g * n
+    return {
+        "h": ParamDef((batch, cfg.ssm_nheads, cfg.ssm_headdim, n),
+                      ("batch", "ssm_heads", None, None), init="zeros", dtype="float32"),
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, conv_ch),
+                         ("batch", None, None), init="zeros"),
+    }
+
+
+def decode_ssm(cfg, p, x, cache):
+    """x [B,1,d]; cache {"h","conv"} -> (out [B,1,d], new cache)."""
+    b = x.shape[0]
+    di, g, n, nh, hd = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    z, xr, bc, dt_raw = _split_proj(cfg, p, x[:, 0])
+    conv_in = jnp.concatenate([xr, bc], axis=-1)            # [B, C]
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # [B,K,C]
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"])
+    xr2, bc2 = conv_out[..., :di], conv_out[..., di:]
+    B = bc2[..., : g * n].reshape(b, g, n)
+    C = bc2[..., g * n:].reshape(b, g, n)
+    xh = xr2.reshape(b, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_new = ssd_decode_step_ref(cache["h"], xh, dt, A, B, C)
+    y = (y + xh * p["D"][None, :, None]).reshape(b, di).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z, eps=cfg.norm_eps)
+    out = (y @ p["out_proj"]).astype(x.dtype)[:, None]
+    new_cache = {"h": h_new, "conv": hist[:, 1:]}
+    return out, new_cache

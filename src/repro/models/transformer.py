@@ -1,0 +1,472 @@
+"""Decoder stacks: scan-over-layers with stacked params (fast compile at
+80+ layers), heterogeneous hybrid patterns via pattern-group scanning,
+whisper-style encoder-decoder, and cache-threaded decode paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.core.lms.policies import tag
+from repro.models import attention as attn_mod
+from repro.models.attention import (attention_defs, project_qkv, out_proj,
+                                    decode_attention)
+from repro.models.layers import (ParamDef, apply_mlp, apply_norm, mlp_defs,
+                                 norm_defs, apply_rope, apply_mrope)
+from repro.models.moe import moe_defs, apply_moe
+from repro.models.rglru import (rglru_defs, apply_rglru, decode_rglru,
+                                rglru_cache_defs)
+from repro.models.sharding import constrain
+from repro.models.ssm import (ssm_defs, apply_ssm, decode_ssm, ssm_cache_defs)
+
+# ---------------------------------------------------------------------------
+# Stack planning
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ModelConfig):
+    """[("scan", pattern_kinds, n_groups)] + optional ("unroll", rem_kinds)."""
+    kinds = cfg.layer_kinds()
+    if len(set(kinds)) > 1:
+        p = len(cfg.block_pattern)
+        nfull = cfg.num_layers // p
+        rem = kinds[nfull * p:]
+        plan = [("scan", tuple(cfg.block_pattern), nfull)]
+        if rem:
+            plan.append(("unroll", tuple(rem)))
+        return plan
+    return [("scan", (kinds[0],), cfg.num_layers)]
+
+
+def _stack(defs, n: int):
+    """Add a leading ("layers", n) axis to every ParamDef in a tree."""
+    is_def = lambda x: isinstance(x, ParamDef)
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=is_def)
+
+
+def layer_defs(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "local_attn", "enc_attn"):
+        d = {"ln1": norm_defs(cfg, cfg.d_model),
+             "attn": attention_defs(cfg),
+             "ln2": norm_defs(cfg, cfg.d_model),
+             "ffn": moe_defs(cfg) if cfg.num_experts else mlp_defs(cfg)}
+        return d
+    if kind == "xattn":  # whisper decoder layer: self + cross + mlp
+        return {"ln1": norm_defs(cfg, cfg.d_model),
+                "attn": attention_defs(cfg),
+                "lnx": norm_defs(cfg, cfg.d_model),
+                "xattn": attention_defs(cfg, cross=True),
+                "ln2": norm_defs(cfg, cfg.d_model),
+                "ffn": mlp_defs(cfg)}
+    if kind == "ssd":
+        return {"ln1": norm_defs(cfg, cfg.d_model), "ssm": ssm_defs(cfg)}
+    if kind == "rglru":
+        return {"ln1": norm_defs(cfg, cfg.d_model),
+                "rec": rglru_defs(cfg),
+                "ln2": norm_defs(cfg, cfg.d_model),
+                "ffn": moe_defs(cfg) if cfg.num_experts else mlp_defs(cfg)}
+    raise ValueError(kind)
+
+
+def decoder_defs(cfg: ModelConfig):
+    defs = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, n = entry
+            group = {f"{k}_{i}": layer_defs(cfg, k) for i, k in enumerate(pattern)}
+            defs[f"stack{gi}"] = _stack(group, n)
+        else:
+            _, rem = entry
+            defs[f"rem{gi}"] = {f"layer{i}_{k}": layer_defs(cfg, k)
+                                for i, k in enumerate(rem)}
+    return defs
+
+
+def encoder_defs(cfg: ModelConfig):
+    group = {"enc_attn_0": layer_defs(cfg, "enc_attn")}
+    return {"stack0": _stack(group, cfg.encoder_layers),
+            "final_norm": norm_defs(cfg, cfg.d_model)}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) layer application
+# ---------------------------------------------------------------------------
+
+def _rope_qk(cfg, q, k, ctx):
+    if cfg.frontend == "audio":
+        return q, k  # whisper: absolute sinusoidal positions at embedding
+    if cfg.mrope_sections:
+        q = apply_mrope(q, ctx["positions3"], cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, ctx["positions3"], cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, ctx["positions"], cfg.rope_theta)
+        k = apply_rope(k, ctx["positions"], cfg.rope_theta)
+    return q, k
+
+
+def _ffn(cfg, p, x):
+    h = apply_norm(cfg, p.get("ln2", {}), x)
+    h = tag(constrain(h, "batch", "seq_resid", None), "mlp_norm")
+    if cfg.num_experts:
+        y, aux = apply_moe(cfg, p["ffn"], h)
+    else:
+        y, aux = apply_mlp(cfg, p["ffn"], h), jnp.float32(0.0)
+    return x + y, aux
+
+
+def apply_layer(cfg, kind, p, x, ctx):
+    """-> (x, aux_loss)."""
+    x = tag(constrain(x, "batch", "seq_resid", None), "resid")
+    if kind in ("attn", "local_attn", "enc_attn"):
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        h = tag(h, "attn_norm")
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        causal = kind != "enc_attn"
+        if causal:
+            q, k = _rope_qk(cfg, q, k, ctx)
+        window = cfg.window if kind == "local_attn" else 0
+        o = attn_mod.attention(q, k, v, causal=causal, window=window,
+                               impl=ctx["attn_impl"], chunk=ctx["attn_chunk"])
+        o = tag(constrain(o, "batch", "seq", "heads", None), "attn_out")
+        x = x + out_proj(cfg, p["attn"], o)
+        return _ffn(cfg, p, x)
+    if kind == "xattn":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        o = attn_mod.attention(q, k, v, causal=True, impl=ctx["attn_impl"],
+                               chunk=ctx["attn_chunk"])
+        x = x + out_proj(cfg, p["attn"], o)
+        hx = apply_norm(cfg, p.get("lnx", {}), x)
+        q2, k2, v2 = project_qkv(cfg, p["xattn"], hx, kv_x=ctx["enc_out"])
+        o2 = attn_mod.attention(q2, k2, v2, causal=False, impl=ctx["attn_impl"],
+                                chunk=ctx["attn_chunk"])
+        x = x + out_proj(cfg, p["xattn"], o2)
+        return _ffn(cfg, p, x)
+    if kind == "ssd":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        y, _ = apply_ssm(cfg, p["ssm"], h, ssd_impl=ctx.get("ssd_impl", "ref"))
+        return x + y, jnp.float32(0.0)
+    if kind == "rglru":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        x = x + apply_rglru(cfg, p["rec"], h)
+        return _ffn(cfg, p, x)
+    raise ValueError(kind)
+
+
+def apply_decoder(cfg, params, x, ctx, *, policy=None, no_remat=False,
+                  unroll: bool = False):
+    """-> (x, aux_loss). Scans pattern groups with optional remat policy.
+    unroll=True fully unrolls the layer scan — used by the dry-run so
+    compiled.cost_analysis() counts every layer (XLA tallies a while-loop
+    body once, ignoring the trip count)."""
+    aux = jnp.float32(0.0)
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, n_iter = entry
+            stack = params[f"stack{gi}"]
+
+            def body(carry, lp, _pattern=pattern):
+                h, a = carry
+                for i, k in enumerate(_pattern):
+                    h, da = apply_layer(cfg, k, lp[f"{k}_{i}"], h, ctx)
+                    a = a + da
+                return (h, a), None
+
+            if not no_remat:
+                body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), stack,
+                                       unroll=n_iter if unroll else 1)
+        else:
+            _, rem = entry
+            for i, k in enumerate(rem):
+                x, da = apply_layer(cfg, k, params[f"rem{gi}"][f"layer{i}_{k}"], x, ctx)
+                aux = aux + da
+    return x, aux
+
+
+def apply_encoder(cfg, params, x, ctx):
+    enc_ctx = dict(ctx)
+
+    def body(h, lp):
+        h, _ = apply_layer(cfg, "enc_attn", lp["enc_attn_0"], h, enc_ctx)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["stack0"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_defs(cfg, batch: int, cache_len: int, window: int = 0):
+    s = min(window, cache_len) if window else cache_len
+    kd = ParamDef((batch, s, cfg.num_kv_heads, cfg.head_dim),
+                  ("batch", "kv_seq", "kv_heads", None), init="zeros")
+    return {"k": kd, "v": kd}
+
+
+def _xattn_cache_defs(cfg, batch: int, cache_len: int):
+    d = _attn_cache_defs(cfg, batch, cache_len)
+    enc = ParamDef((batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim),
+                   ("batch", "kv_seq", "kv_heads", None), init="zeros")
+    d.update({"xk": enc, "xv": enc})
+    return d
+
+
+def layer_cache_defs(cfg, kind, batch: int, cache_len: int):
+    if kind == "attn":
+        return _attn_cache_defs(cfg, batch, cache_len)
+    if kind == "local_attn":
+        return _attn_cache_defs(cfg, batch, cache_len, window=cfg.window)
+    if kind == "xattn":
+        return _xattn_cache_defs(cfg, batch, cache_len)
+    if kind == "ssd":
+        return ssm_cache_defs(cfg, batch)
+    if kind == "rglru":
+        return rglru_cache_defs(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_defs(cfg, batch: int, cache_len: int):
+    defs = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, n = entry
+            group = {f"{k}_{i}": layer_cache_defs(cfg, k, batch, cache_len)
+                     for i, k in enumerate(pattern)}
+            defs[f"stack{gi}"] = _stack(group, n)
+        else:
+            _, rem = entry
+            defs[f"rem{gi}"] = {f"layer{i}_{k}": layer_cache_defs(cfg, k, batch, cache_len)
+                                for i, k in enumerate(rem)}
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Prefill-time cache population helpers
+# ---------------------------------------------------------------------------
+
+def _ring_write(cache_k, k_new, seq_len: int):
+    """Write the last min(S, W) keys of k_new [B,S,K,D] into ring cache
+    [B,W,K,D] at slots abs_pos % W."""
+    w = cache_k.shape[1]
+    s = k_new.shape[1]
+    n = min(s, w)
+    src = k_new[:, s - n:]
+    slots = (jnp.arange(n) + (s - n)) % w
+    return cache_k.at[:, slots].set(src)
+
+
+def apply_layer_prefill(cfg, kind, p, x, ctx, cache_len: int):
+    """Like apply_layer but also returns the populated cache for the layer."""
+    x_out_aux = None
+    if kind in ("attn", "local_attn"):
+        xi = constrain(x, "batch", "seq", None)
+        h = apply_norm(cfg, p.get("ln1", {}), xi)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        q, k = _rope_qk(cfg, q, k, ctx)
+        window = cfg.window if kind == "local_attn" else 0
+        o = attn_mod.attention(q, k, v, causal=True, window=window,
+                               impl=ctx["attn_impl"], chunk=ctx["attn_chunk"])
+        x2 = xi + out_proj(cfg, p["attn"], o)
+        x2, aux = _ffn(cfg, p, x2)
+        s = min(window, cache_len) if window else cache_len
+        b = x.shape[0]
+        ck = jnp.zeros((b, s, cfg.num_kv_heads, cfg.head_dim), k.dtype)
+        cv = jnp.zeros_like(ck)
+        if window:
+            ck = _ring_write(ck, k, x.shape[1])
+            cv = _ring_write(cv, v, x.shape[1])
+        else:
+            n = min(x.shape[1], s)
+            ck = jax.lax.dynamic_update_slice(ck, k[:, :n], (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v[:, :n], (0, 0, 0, 0))
+        return x2, {"k": ck, "v": cv}, aux
+    if kind == "xattn":
+        xi = constrain(x, "batch", "seq", None)
+        h = apply_norm(cfg, p.get("ln1", {}), xi)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        o = attn_mod.attention(q, k, v, causal=True, impl=ctx["attn_impl"],
+                               chunk=ctx["attn_chunk"])
+        x2 = xi + out_proj(cfg, p["attn"], o)
+        hx = apply_norm(cfg, p.get("lnx", {}), x2)
+        q2, k2, v2 = project_qkv(cfg, p["xattn"], hx, kv_x=ctx["enc_out"])
+        o2 = attn_mod.attention(q2, k2, v2, causal=False, impl=ctx["attn_impl"],
+                                chunk=ctx["attn_chunk"])
+        x2 = x2 + out_proj(cfg, p["xattn"], o2)
+        x2, aux = _ffn(cfg, p, x2)
+        b = x.shape[0]
+        ck = jnp.zeros((b, cache_len, cfg.num_kv_heads, cfg.head_dim), k.dtype)
+        cv = jnp.zeros_like(ck)
+        n = min(x.shape[1], cache_len)
+        ck = jax.lax.dynamic_update_slice(ck, k[:, :n], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, :n], (0, 0, 0, 0))
+        return x2, {"k": ck, "v": cv, "xk": k2, "xv": v2}, aux
+    if kind == "ssd":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        l = x.shape[1]
+        y, h_final = apply_ssm(cfg, p["ssm"], h, ssd_impl="ref")
+        # conv history for decode: last (K-1) pre-conv channels
+        from repro.models.ssm import _split_proj
+        _, xr, bc, _ = _split_proj(cfg, p["ssm"], h)
+        conv_in = jnp.concatenate([xr, bc], axis=-1)
+        km1 = cfg.ssm_conv - 1
+        if l >= km1:
+            conv_hist = conv_in[:, -km1:]
+        else:
+            conv_hist = jnp.pad(conv_in, ((0, 0), (km1 - l, 0), (0, 0)))
+        return x + y, {"h": h_final, "conv": conv_hist}, jnp.float32(0.0)
+    if kind == "rglru":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        # replicate apply_rglru but keep final state + conv history
+        from repro.models.rglru import _causal_conv as rg_conv, _lru_gates
+        gate = jax.nn.gelu(h @ p["rec"]["w_gate_branch"])
+        u_pre = h @ p["rec"]["w_x_branch"]
+        u = rg_conv(u_pre, p["rec"]["conv_w"], p["rec"]["conv_b"])
+        log_a, x_in = _lru_gates(p["rec"], u)
+        a = jnp.exp(log_a)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2_, b2 = c2
+            return a1 * a2_, b1 * a2_ + b2
+
+        hseq = jax.lax.associative_scan(combine, (a, x_in), axis=1)[1]
+        out = (hseq.astype(x.dtype) * gate) @ p["rec"]["w_out"]
+        x2 = x + out
+        x2, aux = _ffn(cfg, p, x2)
+        l = x.shape[1]
+        conv_hist = u_pre[:, -3:]
+        if l < 3:
+            conv_hist = jnp.pad(u_pre, ((0, 0), (3 - l, 0), (0, 0)))
+        return x2, {"h": hseq[:, -1], "conv": conv_hist}, aux
+    raise ValueError(kind)
+
+
+def apply_decoder_prefill(cfg, params, x, ctx, cache_len: int,
+                          unroll: bool = False):
+    """-> (x, cache, aux). Scanned groups also emit stacked caches."""
+    aux = jnp.float32(0.0)
+    cache = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, _ = entry
+            stack = params[f"stack{gi}"]
+
+            def body(carry, lp, _pattern=pattern):
+                h, a = carry
+                caches = {}
+                for i, k in enumerate(_pattern):
+                    h, c, da = apply_layer_prefill(cfg, k, lp[f"{k}_{i}"], h, ctx, cache_len)
+                    caches[f"{k}_{i}"] = c
+                    a = a + da
+                return (h, a), caches
+
+            (x, aux), stack_cache = jax.lax.scan(
+                body, (x, aux), stack, unroll=entry[2] if unroll else 1)
+            cache[f"stack{gi}"] = stack_cache
+        else:
+            _, rem = entry
+            cache[f"rem{gi}"] = {}
+            for i, k in enumerate(rem):
+                x, c, da = apply_layer_prefill(
+                    cfg, k, params[f"rem{gi}"][f"layer{i}_{k}"], x, ctx, cache_len)
+                cache[f"rem{gi}"][f"layer{i}_{k}"] = c
+                aux = aux + da
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(cfg, kind, p, x, cache, pos, ctx):
+    """x [B,1,d]; -> (x, new_cache)."""
+    if kind in ("attn", "local_attn"):
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        q, k = _rope_qk(cfg, q, k, ctx)
+        window = cfg.window if kind == "local_attn" else 0
+        smax = cache["k"].shape[1]
+        slot = (pos % smax) if window else jnp.minimum(pos, smax - 1)
+        # keep the cache layout stable through the in-place update: without
+        # the constraints GSPMD reshapes the whole cache (all-to-all) around
+        # the dynamic-update-slice every layer
+        cache_axes = ("batch", "kv_seq", "kv_heads", None)
+        ck = jax.lax.dynamic_update_slice(
+            constrain(cache["k"], *cache_axes), k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            constrain(cache["v"], *cache_axes), v, (0, slot, 0, 0))
+        ck = constrain(ck, *cache_axes)
+        cv = constrain(cv, *cache_axes)
+        kv_len = jnp.minimum(pos + 1, smax)
+        o = decode_attention(q, ck, cv, kv_len)
+        x = x + out_proj(cfg, p["attn"], o)
+        x, _ = _ffn(cfg, p, x)
+        return x, {"k": ck, "v": cv}
+    if kind == "xattn":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        smax = cache["k"].shape[1]
+        slot = jnp.minimum(pos, smax - 1)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        o = decode_attention(q, ck, cv, jnp.minimum(pos + 1, smax))
+        x = x + out_proj(cfg, p["attn"], o)
+        hx = apply_norm(cfg, p.get("lnx", {}), x)
+        q2 = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"])
+        if "bq" in p["xattn"]:
+            q2 = q2 + p["xattn"]["bq"]
+        o2 = decode_attention(q2, cache["xk"], cache["xv"], cache["xk"].shape[1])
+        x = x + out_proj(cfg, p["xattn"], o2)
+        x, _ = _ffn(cfg, p, x)
+        return x, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+    if kind == "ssd":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        y, new_cache = decode_ssm(cfg, p["ssm"], h, cache)
+        return x + y, new_cache
+    if kind == "rglru":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        y, new_cache = decode_rglru(cfg, p["rec"], h, cache)
+        x = x + y
+        x, _ = _ffn(cfg, p, x)
+        return x, new_cache
+    raise ValueError(kind)
+
+
+def apply_decoder_decode(cfg, params, caches, x, pos, ctx,
+                         unroll: bool = False):
+    """-> (x, new_caches)."""
+    new_caches = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, _ = entry
+            stack = params[f"stack{gi}"]
+
+            def body(h, inp, _pattern=pattern):
+                lp, lc = inp
+                ncs = {}
+                for i, k in enumerate(_pattern):
+                    h, ncs[f"{k}_{i}"] = apply_layer_decode(
+                        cfg, k, lp[f"{k}_{i}"], h, lc[f"{k}_{i}"], pos, ctx)
+                return h, ncs
+
+            x, nc = jax.lax.scan(body, x, (stack, caches[f"stack{gi}"]),
+                                 unroll=entry[2] if unroll else 1)
+            new_caches[f"stack{gi}"] = nc
+        else:
+            _, rem = entry
+            new_caches[f"rem{gi}"] = {}
+            for i, k in enumerate(rem):
+                key = f"layer{i}_{k}"
+                x, nc = apply_layer_decode(
+                    cfg, k, params[f"rem{gi}"][key], x, caches[f"rem{gi}"][key], pos, ctx)
+                new_caches[f"rem{gi}"][key] = nc
+    return x, new_caches

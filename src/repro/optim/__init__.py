@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdamState, SGDState, adamw_init, adamw_update,
+                               sgdm_init, sgdm_update, clip_by_global_norm,
+                               global_norm, OPTIMIZERS)
+from repro.optim.schedule import warmup_cosine, constant, SCHEDULES
+
+__all__ = ["AdamState", "SGDState", "adamw_init", "adamw_update", "sgdm_init",
+           "sgdm_update", "clip_by_global_norm", "global_norm", "OPTIMIZERS",
+           "warmup_cosine", "constant", "SCHEDULES"]

@@ -1,0 +1,99 @@
+"""AdamW + momentum-SGD in pure JAX, as pytree transforms. State is a pytree
+matching params (shardable with the same specs; host-offloadable via LMS
+residency). fp32 moments + fp32 master copy over bf16 params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+    master: dict          # fp32 master params
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: dict
+
+
+def adamw_init(params) -> AdamState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    # master must be a DISTINCT buffer even for fp32 params (astype is a
+    # no-op copy), or donation would see the same buffer twice
+    master = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype != jnp.float32
+        else jnp.copy(p), params)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=master,
+    )
+
+
+def adamw_update(grads, state: AdamState, params, *, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, mp):
+        gf = g.astype(jnp.float32)
+        m2 = beta1 * m + (1 - beta1) * gf
+        v2 = beta2 * v + (1 - beta2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        mp2 = mp - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * mp)
+        return m2, v2, mp2
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, AdamState(step, mu, nu, master)
+
+
+def sgdm_init(params) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def sgdm_update(grads, state: SGDState, params, *, lr, beta1=0.9,
+                weight_decay=0.0, **_):
+    step = state.step + 1
+
+    def upd(g, m, p):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m2 = beta1 * m + gf
+        return m2, (p.astype(jnp.float32) - lr * m2).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state.momentum, params)
+    mom = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, SGDState(step, mom)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "sgdm": (sgdm_init, sgdm_update),
+}

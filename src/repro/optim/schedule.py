@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step scalar)."""
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step, *, base_lr: float, **_):
+    return jnp.full((), base_lr, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (Roofline, CollectiveStats,
+                                     parse_collectives,
+                                     model_flops_per_device, format_table)
+
+__all__ = ["Roofline", "CollectiveStats", "parse_collectives",
+           "model_flops_per_device", "format_table"]

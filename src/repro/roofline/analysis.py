@@ -1,0 +1,225 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = ici_bytes/ici_bw + dcn_bytes/dcn_bw   (per device)
+plus a fourth, LMS-specific term:
+    hostswap   = planner swap_bytes_per_step / host_bw
+
+HLO_FLOPs / bytes come from compiled.cost_analysis() (the SPMD module is
+per-device, so the numbers are per-device). Collective bytes are parsed from
+compiled.as_text(): for every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute, operand bytes are summed; replica_groups
+decide the fabric (a group whose members span pods crosses DCN).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro import hw as hwlib
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*|pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    crosses_pod: bool
+    name: str
+
+
+@dataclass
+class CollectiveStats:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def ici_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if not o.crosses_pod)
+
+    @property
+    def dcn_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if o.crosses_pod)
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + o.bytes
+        return out
+
+
+def parse_collectives(hlo_text: str, *, pod_stride: int = 0) -> CollectiveStats:
+    """pod_stride: #devices per pod (0 = single pod, nothing crosses DCN)."""
+    # map op name -> result bytes (first shape on its definition line)
+    def_bytes: Dict[str, int] = {}
+    def_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = def_re.match(ln)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shapes = _SHAPE_RE.findall(rhs.split(")")[0] if rhs.startswith("(")
+                                   else rhs[:rhs.find("(") if "(" in rhs else len(rhs)])
+        if shapes:
+            def_bytes[name] = sum(_shape_bytes(d, s) for d, s in shapes)
+
+    stats = CollectiveStats()
+    coll_re = re.compile(
+        r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*.*?\b(" + "|".join(COLLECTIVES) +
+        r")(?:-start)?\(([^)]*)\)")
+    for ln in lines:
+        m = coll_re.match(ln)
+        if not m:
+            continue
+        name, kind, args = m.groups()
+        if "-done" in ln.split("=")[1].split("(")[0]:
+            continue
+        operands = re.findall(r"%?([\w.\-]+)", args)
+        nbytes = sum(def_bytes.get(op, 0) for op in operands
+                     if op in def_bytes)
+        if nbytes == 0:
+            nbytes = def_bytes.get(name, 0)
+        crosses = False
+        gm = re.search(r"replica_groups=\{([^}]*)\}", ln)
+        if gm and pod_stride:
+            first = gm.group(1).split("}")[0]
+            ids = [int(x) for x in re.findall(r"\d+", first)[:64]]
+            if len(ids) >= 2:
+                crosses = (max(ids) // pod_stride) != (min(ids) // pod_stride)
+        else:
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]", ln)
+            if gm2 and pod_stride:
+                # iota groups [G,S]<=[N]: contiguous stride-1 groups of S
+                gsize = int(gm2.group(2))
+                crosses = gsize > pod_stride
+        stats.ops.append(CollectiveOp(kind, nbytes, crosses, name))
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_dev: float
+    bytes_dev: float
+    ici_bytes_dev: float
+    dcn_bytes_dev: float
+    swap_bytes_dev: float
+    model_flops_dev: float
+    peak_hbm_dev: int
+    bytes_model_dev: float = 0.0   # fused-estimate HBM traffic (analytic)
+    notes: str = ""
+
+    def terms(self, hw: hwlib.HardwareSpec = hwlib.DEFAULT) -> Dict[str, float]:
+        ici_bw = hw.ici_link_bw * hw.ici_links
+        return {
+            "compute_s": self.flops_dev / hw.peak_flops_bf16,
+            "memory_s": self.bytes_model_dev / hw.hbm_bw,
+            "memory_hlo_s": self.bytes_dev / hw.hbm_bw,
+            "collective_s": (self.ici_bytes_dev / ici_bw +
+                             self.dcn_bytes_dev / hw.dcn_bw),
+            "hostswap_s": self.swap_bytes_dev / hw.host_bw,
+        }
+
+    def dominant(self, hw: hwlib.HardwareSpec = hwlib.DEFAULT) -> str:
+        t = self.terms(hw)
+        t.pop("memory_hlo_s", None)   # unfused upper bound; not the decider
+        return max(t, key=t.get)
+
+    def step_time(self, hw: hwlib.HardwareSpec = hwlib.DEFAULT) -> float:
+        """Optimistic overlap model: the dominant term IS the step time."""
+        t = self.terms(hw)
+        t.pop("memory_hlo_s", None)
+        return max(t.values())
+
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops_dev / self.flops_dev if self.flops_dev else 0.0
+
+    def roofline_fraction(self, hw: hwlib.HardwareSpec = hwlib.DEFAULT) -> float:
+        """MODEL_FLOPS-based MFU bound for this schedule: the fraction of
+        peak compute the step achieves if every term overlaps perfectly."""
+        if self.model_flops_dev == 0:
+            return 0.0
+        ideal = self.model_flops_dev / hw.peak_flops_bf16
+        return ideal / self.step_time(hw)
+
+    def to_dict(self, hw: hwlib.HardwareSpec = hwlib.DEFAULT) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(self.terms(hw))
+        d["dominant"] = self.dominant(hw)
+        d["useful_flops_ratio"] = self.useful_flops_ratio()
+        d["roofline_fraction"] = self.roofline_fraction(hw)
+        d["step_time_s"] = self.step_time(hw)
+        return d
+
+
+def model_flops_per_device(cfg, shape, chips: int) -> float:
+    """6*N_active*D for training, 2*N_active*D(+attn) for inference."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    flops = mult * cfg.active_param_count() * tokens
+    # attention score/update FLOPs (not in param count)
+    if cfg.num_heads:
+        w = cfg.window if cfg.window else shape.seq_len
+        kv = min(w, shape.seq_len)
+        per_tok = 4.0 * kv * cfg.num_heads * cfg.head_dim
+        n_attn = sum(1 for k in cfg.layer_kinds() if k in ("attn", "local_attn"))
+        frac = n_attn / max(cfg.num_layers, 1)
+        flops += (mult / 2.0) * tokens * per_tok * frac * (0.5 if shape.kind != "decode" else 1.0)
+    return flops / chips
+
+
+def format_table(rows: List[dict]) -> str:
+    if not rows:
+        return "(no rows)"
+    cols = ["arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+            "memory_hlo_s", "collective_s", "hostswap_s", "step_time_s",
+            "useful_flops_ratio", "roofline_fraction"]
+    widths = {c: max(len(c), max(len(_fmt(r.get(c, ""))) for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-|-".join("-" * widths[c] for c in cols)
+    body = "\n".join(" | ".join(_fmt(r.get(c, "")).ljust(widths[c]) for c in cols)
+                     for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e4:
+            return f"{v:.2e}"
+        return f"{v:.4f}"
+    return str(v)

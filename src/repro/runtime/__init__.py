@@ -1,0 +1,6 @@
+from repro.runtime.fault import (FailureDetector, Heartbeat, HeartbeatStore,
+                                 RestartPolicy, StepTimer)
+from repro.runtime.elastic import ElasticDecision, replan_mesh, apply_decision
+
+__all__ = ["FailureDetector", "Heartbeat", "HeartbeatStore", "RestartPolicy",
+           "StepTimer", "ElasticDecision", "replan_mesh", "apply_decision"]

@@ -1,0 +1,112 @@
+"""Fault-tolerance runtime: heartbeats, failure detection, restart policy,
+and straggler statistics. On real pods the heartbeat store is a shared
+filesystem / etcd; here it is file-based and the detection logic is
+identical (and unit-tested by fault injection).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Heartbeat:
+    process: int
+    step: int
+    t: float
+    step_time: float
+
+
+class HeartbeatStore:
+    """File-per-process heartbeat registry."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, process: int, step: int, step_time: float):
+        hb = Heartbeat(process, step, time.time(), step_time)
+        tmp = os.path.join(self.dir, f".hb_{process}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(dataclasses.asdict(hb), f)
+        os.rename(tmp, os.path.join(self.dir, f"hb_{process}.json"))
+
+    def read_all(self) -> Dict[int, Heartbeat]:
+        out = {}
+        for name in os.listdir(self.dir):
+            if name.startswith("hb_"):
+                try:
+                    with open(os.path.join(self.dir, name)) as f:
+                        d = json.load(f)
+                    out[d["process"]] = Heartbeat(**d)
+                except (json.JSONDecodeError, OSError):
+                    continue  # torn write: treat as missing this round
+        return out
+
+
+@dataclass
+class FailureDetector:
+    """Declares a process dead after `timeout` without a heartbeat, and a
+    straggler when its step time exceeds `straggler_factor` x the median."""
+    timeout: float = 60.0
+    straggler_factor: float = 2.0
+
+    def check(self, beats: Dict[int, Heartbeat], expected: List[int],
+              now: Optional[float] = None):
+        now = now if now is not None else time.time()
+        dead = [p for p in expected
+                if p not in beats or now - beats[p].t > self.timeout]
+        alive = [p for p in expected if p not in dead]
+        stragglers: List[int] = []
+        times = sorted(beats[p].step_time for p in alive if p in beats)
+        if len(times) >= 3:
+            median = times[len(times) // 2]
+            stragglers = [p for p in alive
+                          if beats[p].step_time > self.straggler_factor * median]
+        return dead, stragglers
+
+
+@dataclass
+class RestartPolicy:
+    """Exponential-backoff restart budget (the launcher consults this when a
+    step raises or a peer is declared dead)."""
+    max_restarts: int = 10
+    backoff_base: float = 2.0
+    restarts: int = 0
+
+    def next_delay(self) -> Optional[float]:
+        if self.restarts >= self.max_restarts:
+            return None
+        d = min(self.backoff_base ** self.restarts, 300.0)
+        self.restarts += 1
+        return d
+
+
+class StepTimer:
+    """Rolling step-time stats; feeds straggler detection + throughput logs."""
+
+    def __init__(self, window: int = 50):
+        self.window = window
+        self.times: List[float] = []
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return dt
+
+    @property
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]

@@ -1,0 +1,10 @@
+from repro.train.steps import (TrainState, Zero1State, build_train_step,
+                               build_zero1_train_step, init_train_state,
+                               init_zero1_state, build_prefill_step,
+                               build_decode_step, make_state_shardings)
+from repro.train.trainer import Trainer
+
+__all__ = ["TrainState", "Zero1State", "build_train_step",
+           "build_zero1_train_step", "init_train_state", "init_zero1_state",
+           "build_prefill_step", "build_decode_step", "make_state_shardings",
+           "Trainer"]

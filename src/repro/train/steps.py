@@ -1,0 +1,333 @@
+"""Train/serve step construction: LMS (planner-chosen remat/offload policy +
+residency shardings) x DDL (explicit hierarchical gradient reduction in a
+shard_map manual over the DP axes, GSPMD auto over `model`).
+
+Two DDL integration modes:
+  * "allreduce" — the paper's schedule: RS(data) -> AR(pod) -> AG(data) on
+    gradients; optimizer state replicated across DP ranks.
+  * "zero1"     — beyond-paper: stop at the reduce-scattered shard, update a
+    1/|data| optimizer shard, all-gather *params*. Optimizer state lives as
+    flat fp32 vectors sharded over `data`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import TrainConfig
+from repro.core.ddl.allreduce import (ddl_reduce_tree,
+                                      hierarchical_reduce_scatter_flat,
+                                      pack, pack_spec, unpack, PackSpec)
+from repro.core.lms.planner import MemoryPlan, plan_memory, plan_to_policy
+from repro.core.lms import offload as lms_offload
+from repro.core.lms.offload import effective_kind
+from repro.launch.mesh import dp_axes, mesh_axis_sizes
+from repro.models.model import Model
+from repro.models.sharding import sharding_env, rules_without, spec as mkspec
+from repro.optim.adamw import OPTIMIZERS, clip_by_global_norm
+from repro.optim.schedule import SCHEDULES
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt: Any
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful mode: DDL all-reduce, replicated optimizer
+# ---------------------------------------------------------------------------
+
+def build_train_step(model: Model, tcfg: TrainConfig, mesh,
+                     plan: Optional[MemoryPlan] = None,
+                     donate: bool = True, rules: Optional[dict] = None):
+    """-> (step_fn(state, batch) -> (state, metrics), in/out shardings)."""
+    cfg = model.cfg
+    sizes = mesh_axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    data_size = sizes.get("data", 1)
+    pod_size = sizes.get("pod", 1)
+    pod_axis = "pod" if "pod" in sizes and pod_size > 1 else None
+    policy = plan_to_policy(plan) if plan is not None else None
+    opt_init, opt_update = OPTIMIZERS[tcfg.optimizer]
+    sched = SCHEDULES["warmup_cosine"]
+
+    inner_rules = rules_without(dpa, rules=rules)
+
+    def loss_fn(params, batch):
+        with sharding_env(mesh, rules=inner_rules):
+            loss, metrics = model.loss(params, batch, policy=policy)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if tcfg.microbatches > 1:
+            m = tcfg.microbatches
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:])
+                if x.ndim >= 1 and x.shape[0] % m == 0 else
+                jnp.broadcast_to(x, (m,) + x.shape), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, l), _ = jax.lax.scan(micro, (zero, jnp.float32(0.0)), mb_batch)
+            g = jax.tree.map(lambda x: x / m, g)
+            return l / m, {"ce": l / m, "aux": jnp.float32(0.0)}, g
+        (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return l, metrics, g
+
+    _, pspecs = model.abstract_params(mesh)
+
+    def per_replica(state: TrainState, batch):
+        params, opt_state = state.params, state.opt
+        loss, metrics, grads = grads_of(params, batch)
+        # DDL: explicit topology-aware reduction over the DP axes
+        grads, _ = ddl_reduce_tree(grads, tcfg.ddl, data_axis="data",
+                                   pod_axis=pod_axis, data_size=data_size,
+                                   pod_size=pod_size, param_specs=pspecs)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        loss = jax.lax.pmean(loss, dpa)
+        lr = sched(state.step, base_lr=tcfg.learning_rate,
+                   warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
+        new_params, new_opt = opt_update(
+            grads, opt_state, params, lr=lr, beta1=tcfg.beta1, beta2=tcfg.beta2,
+            weight_decay=tcfg.weight_decay)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(state.step + 1, new_params, new_opt), out_metrics
+
+    # shard_map: manual over DP axes only; GSPMD handles `model`
+    replicated = jax.tree.map(lambda _: P(), pspecs)
+    opt_replicated = _opt_specs_like(opt_init, replicated)
+    state_specs_manual = TrainState(P(), replicated, opt_replicated)
+    _, bshards = model.input_specs(tcfg.shape, mesh)
+    # inputs are only DP-sharded, so their physical specs double as the
+    # manual specs for the shard_map over the DP axes
+    batch_manual = bshards
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    step_sm = jax.shard_map(
+        per_replica, mesh=mesh,
+        in_specs=(state_specs_manual, batch_manual),
+        out_specs=(state_specs_manual, metric_specs),
+        check_vma=False, axis_names=set(dpa))
+
+    # physical shardings for jit (TP over model; LMS residency memory kinds)
+    state_shardings = make_state_shardings(model, tcfg, mesh, plan)
+    batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    step_jit = jax.jit(
+        step_sm,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings,
+                       jax.tree.map(lambda _: NamedSharding(mesh, P()), metric_specs)),
+        donate_argnums=(0,) if donate else ())
+    return step_jit, state_shardings, batch_shardings
+
+
+def _opt_specs_like(opt_init, pspecs):
+    """Build PartitionSpec pytree for the optimizer state from param specs."""
+    from repro.optim.adamw import AdamState, SGDState
+    # probe structure without allocating: AdamState(mu,nu,master like params)
+    if opt_init is OPTIMIZERS["adamw"][0]:
+        return AdamState(step=P(), mu=pspecs, nu=pspecs, master=pspecs)
+    return SGDState(step=P(), momentum=pspecs)
+
+
+def make_state_shardings(model: Model, tcfg: TrainConfig, mesh,
+                         plan: Optional[MemoryPlan]):
+    """NamedShardings for TrainState with LMS residency (host memory kinds)."""
+    _, pspecs = model.abstract_params(mesh)
+    residency = plan.residency if plan is not None else {}
+    p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
+    o_kind = effective_kind("pinned_host") if residency.get("optimizer") == "host" else None
+
+    def shard(spec_tree, kind):
+        return jax.tree.map(
+            lambda s: (NamedSharding(mesh, s, memory_kind=kind) if kind
+                       else NamedSharding(mesh, s)), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    params_sh = shard(pspecs, p_kind)
+    opt_init, _ = OPTIMIZERS[tcfg.optimizer]
+    ospecs = _opt_specs_like(opt_init, pspecs)
+    opt_sh = shard(ospecs, o_kind)
+    return TrainState(step=NamedSharding(mesh, P()), params=params_sh, opt=opt_sh)
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, rng) -> TrainState:
+    params = model.init(rng)
+    opt_init, _ = OPTIMIZERS[tcfg.optimizer]
+    return TrainState(jnp.zeros((), jnp.int32), params, opt_init(params))
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper mode: DDL-ZeRO1 (optimizer update between RS and AG)
+# ---------------------------------------------------------------------------
+
+class Zero1State(NamedTuple):
+    step: jnp.ndarray
+    params: Any          # full bf16 tree (TP-sharded)
+    mu: jnp.ndarray      # flat fp32 [Npad], sharded over data
+    nu: jnp.ndarray
+    master: jnp.ndarray
+
+
+def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
+                           plan: Optional[MemoryPlan] = None,
+                           donate: bool = True):
+    cfg = model.cfg
+    sizes = mesh_axis_sizes(mesh)
+    dpa = dp_axes(mesh)
+    data_size = sizes.get("data", 1)
+    pod_size = sizes.get("pod", 1)
+    pod_axis = "pod" if pod_size > 1 else None
+    policy = plan_to_policy(plan) if plan is not None else None
+    sched = SCHEDULES["warmup_cosine"]
+
+    shapes, pspecs = model.abstract_params(mesh)
+    pspec_obj = pack_spec(shapes, pad_to=data_size)
+    npad = pspec_obj.padded
+    beta1, beta2, eps, wd = tcfg.beta1, tcfg.beta2, 1e-8, tcfg.weight_decay
+
+    inner_rules = rules_without(dpa)
+
+    def loss_fn(params, batch):
+        with sharding_env(mesh, rules=inner_rules):
+            loss, metrics = model.loss(params, batch, policy=policy)
+        return loss, metrics
+
+    def per_replica(state: Zero1State, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        flat_g = pack(grads, pspec_obj)                      # [Npad] f32
+        # DDL phases 1-2: my reduced shard
+        shard_g, _ = hierarchical_reduce_scatter_flat(
+            flat_g, data_axis="data", pod_axis=pod_axis,
+            compress_dcn=tcfg.ddl.compress_dcn,
+            mean_over=data_size * pod_size)
+        loss = jax.lax.pmean(loss, dpa)
+        gn_local = jnp.sum(shard_g.astype(jnp.float32) ** 2)
+        gnorm = jnp.sqrt(jax.lax.psum(gn_local, "data"))
+        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        shard_g = shard_g * scale
+        # optimizer update on the 1/|data| shard
+        step = state.step + 1
+        lr = sched(state.step, base_lr=tcfg.learning_rate,
+                   warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
+        b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+        b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+        mu = beta1 * state.mu + (1 - beta1) * shard_g
+        nu = beta2 * state.nu + (1 - beta2) * shard_g * shard_g
+        upd = (mu / b1c) / (jnp.sqrt(nu / b2c) + eps) + wd * state.master
+        master = state.master - lr * upd
+        # DDL phase 3 on *params*: all-gather the updated shard
+        flat_p = jax.lax.all_gather(master, "data", axis=0, tiled=True)
+        new_params = jax.tree.map(
+            lambda old, new: new.astype(old.dtype),
+            state.params, unpack(flat_p, pspec_obj))
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return Zero1State(step, new_params, mu, nu, master), out_metrics
+
+    replicated = jax.tree.map(lambda _: P(), pspecs)
+    state_manual = Zero1State(P(), replicated, P("data"), P("data"), P("data"))
+    _, bshards = model.input_specs(tcfg.shape, mesh)
+    batch_manual = bshards
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    step_sm = jax.shard_map(per_replica, mesh=mesh,
+                            in_specs=(state_manual, batch_manual),
+                            out_specs=(state_manual, metric_specs),
+                            check_vma=False, axis_names=set(dpa))
+
+    residency = plan.residency if plan is not None else {}
+    p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
+    o_kind = effective_kind("pinned_host") if residency.get("optimizer") == "host" else None
+    params_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
+        else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_sh = (NamedSharding(mesh, P("data"), memory_kind=o_kind) if o_kind
+               else NamedSharding(mesh, P("data")))
+    state_sh = Zero1State(NamedSharding(mesh, P()), params_sh,
+                          flat_sh, flat_sh, flat_sh)
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    step_jit = jax.jit(step_sm,
+                       in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh,
+                                      jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                                   metric_specs)),
+                       donate_argnums=(0,) if donate else ())
+    return step_jit, state_sh, batch_sh, pspec_obj
+
+
+def init_zero1_state(model: Model, tcfg: TrainConfig, rng, data_size: int):
+    params = model.init(rng)
+    spec = pack_spec(jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                                  params), pad_to=data_size)
+    flat = pack(params, spec)
+    # distinct buffers for mu/nu (donation would reject a shared zeros buffer)
+    return Zero1State(jnp.zeros((), jnp.int32), params,
+                      jnp.zeros_like(flat), jnp.zeros_like(flat), flat)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(model: Model, shape, mesh, plan=None):
+    _, pspecs = model.abstract_params(mesh)
+    residency = (plan.residency if plan else {})
+    p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
+    params_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
+        else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    _, bshards = model.input_specs(shape, mesh)
+    bshards = {k: v for k, v in bshards.items() if k not in ("pos", "labels")}
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    _, cspecs = model.cache_abstract(shape, mesh)
+    k_kind = effective_kind("pinned_host") if residency.get("kvcache") == "host" else None
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
+        else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def prefill(params, batch):
+        with sharding_env(mesh):
+            return model.prefill(params, batch, cache_len=shape.seq_len)
+
+    fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
+                 out_shardings=(NamedSharding(mesh, P()), cache_sh))
+    return fn, params_sh, batch_sh, cache_sh
+
+
+def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
+                      rules=None):
+    _, pspecs = model.abstract_params(mesh)
+    residency = (plan.residency if plan else {})
+    p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
+    params_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
+        else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    specs, bshards = model.input_specs(shape, mesh)
+    batch_sh = {k: NamedSharding(mesh, v) for k, v in bshards.items() if k != "pos"}
+    pos_sh = NamedSharding(mesh, P())
+    _, cspecs = model.cache_abstract(shape, mesh, rules=rules)
+    k_kind = effective_kind("pinned_host") if residency.get("kvcache") == "host" else None
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
+        else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def decode(params, cache, batch, pos):
+        with sharding_env(mesh, rules=rules):
+            return model.decode_step(params, cache, batch, pos)
+
+    fn = jax.jit(decode,
+                 in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),
+                 out_shardings=(NamedSharding(mesh, P()), cache_sh),
+                 donate_argnums=(1,) if donate else ())
+    return fn, params_sh, batch_sh, cache_sh

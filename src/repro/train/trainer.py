@@ -1,0 +1,149 @@
+"""Training loop: LMS-planned, DDL-reduced steps + async checkpointing,
+heartbeats, straggler stats, and crash-restart (resume from the latest
+committed checkpoint, including the data-iterator position).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.config.base import TrainConfig
+from repro.core.lms.planner import plan_memory
+from repro.data import DataLoader, SyntheticTokens, make_vlm_batch, make_audio_batch
+from repro.launch.mesh import make_mesh, mesh_axis_sizes
+from repro.models.model import Model
+from repro.runtime import HeartbeatStore, StepTimer
+from repro.train.steps import (build_train_step, init_train_state,
+                               build_zero1_train_step, init_zero1_state,
+                               TrainState)
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainConfig, *, attn_impl: str = "blockwise",
+                 process: int = 0, heartbeat_dir: Optional[str] = None):
+        self.tcfg = tcfg
+        self.mesh = make_mesh(tcfg.mesh)
+        self.model = Model(tcfg.model, attn_impl=attn_impl)
+        self.plan = (plan_memory(tcfg.model, tcfg.shape, tcfg.mesh, tcfg.lms,
+                                 zero1=(tcfg.ddl.mode == "zero1"))
+                     if tcfg.lms.enabled else None)
+        self.process = process
+        self.ckpt = Checkpointer(tcfg.checkpoint_dir,
+                                 async_save=tcfg.async_checkpoint)
+        self.hb = HeartbeatStore(heartbeat_dir) if heartbeat_dir else None
+        self.timer = StepTimer()
+        sizes = mesh_axis_sizes(self.mesh)
+        self.dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        self.zero1 = tcfg.ddl.mode == "zero1"
+        if self.zero1:
+            (self.step_fn, self.state_sh, self.batch_sh,
+             self._packspec) = build_zero1_train_step(
+                self.model, tcfg, self.mesh, plan=self.plan)
+        else:
+            self.step_fn, self.state_sh, self.batch_sh = build_train_step(
+                self.model, tcfg, self.mesh, plan=self.plan)
+        self.loader = DataLoader(
+            SyntheticTokens(tcfg.model.vocab_size, seed=tcfg.seed),
+            shard=process, num_shards=1,
+            batch_per_shard=tcfg.shape.global_batch,
+            seq_len=tcfg.shape.seq_len)
+
+    # ---- state ---------------------------------------------------------
+    def init_state(self):
+        rng = jax.random.key(self.tcfg.seed)
+        if self.zero1:
+            sizes = mesh_axis_sizes(self.mesh)
+            st = init_zero1_state(self.model, self.tcfg, rng,
+                                  data_size=sizes.get("data", 1))
+        else:
+            st = init_train_state(self.model, self.tcfg, rng)
+        return jax.device_put(st, self.state_sh)
+
+    def resume_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(), 0
+        _, state_np, extra = self.ckpt.restore(latest)
+        state = self._rebuild_state(state_np)
+        state = jax.device_put(state, self.state_sh)
+        if extra.get("data_state"):
+            self.loader.restore(extra["data_state"])
+        return state, latest
+
+    def _rebuild_state(self, d):
+        """npz roundtrip flattens NamedTuples to dicts; rebuild them."""
+        from repro.optim.adamw import AdamState, SGDState
+        from repro.train.steps import Zero1State
+        step = jnp.asarray(d["step"])
+        if self.zero1:
+            return Zero1State(step, d["params"], jnp.asarray(d["mu"]),
+                              jnp.asarray(d["nu"]), jnp.asarray(d["master"]))
+        o = d["opt"]
+        if self.tcfg.optimizer == "adamw":
+            opt = AdamState(jnp.asarray(o["step"]), o["mu"], o["nu"], o["master"])
+        else:
+            opt = SGDState(jnp.asarray(o["step"]), o["momentum"])
+        return TrainState(step, d["params"], opt)
+
+    def _make_batch(self) -> Dict[str, jnp.ndarray]:
+        cfg = self.tcfg.model
+        b, s = self.tcfg.shape.global_batch, self.tcfg.shape.seq_len
+        rng = np.random.default_rng(self.loader.global_step)
+        if cfg.family == "vlm":
+            raw = make_vlm_batch(rng, b, s, cfg.d_model, cfg.vocab_size)
+            raw["embeds"] = raw["embeds"].astype(np.float32)
+            batch = {"embeds": jnp.asarray(raw["embeds"], jnp.bfloat16),
+                     "positions3": jnp.asarray(raw["positions3"]),
+                     "labels": jnp.asarray(raw["labels"])}
+            self.loader.state.step_in_epoch += 1
+        elif cfg.family == "audio":
+            raw = make_audio_batch(rng, b, s, cfg.encoder_seq, cfg.d_model,
+                                   cfg.vocab_size)
+            batch = {"enc_embeds": jnp.asarray(raw["enc_embeds"], jnp.bfloat16),
+                     "tokens": jnp.asarray(raw["tokens"]),
+                     "labels": jnp.asarray(raw["labels"])}
+            self.loader.state.step_in_epoch += 1
+        else:
+            raw = next(self.loader)
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        return jax.device_put(batch, self.batch_sh)
+
+    # ---- loop ----------------------------------------------------------
+    def train(self, steps: Optional[int] = None,
+              on_step: Optional[Callable] = None):
+        state, start = self.resume_or_init()
+        steps = steps or self.tcfg.total_steps
+        metrics_hist = []
+        for i in range(start, steps):
+            self.timer.start()
+            batch = self._make_batch()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])   # sync point
+            dt = self.timer.stop()
+            metrics_hist.append({"step": i + 1, "loss": loss,
+                                 "grad_norm": float(metrics["grad_norm"]),
+                                 "lr": float(metrics["lr"]), "time_s": dt})
+            if self.hb:
+                self.hb.beat(self.process, i + 1, dt)
+            if on_step:
+                on_step(i + 1, metrics_hist[-1])
+            if (i + 1) % self.tcfg.checkpoint_every == 0 or i + 1 == steps:
+                self.save(i + 1, state)
+        self.ckpt.wait()
+        return state, metrics_hist
+
+    def save(self, step: int, state):
+        if self.zero1:
+            payload = {"step": state.step, "params": state.params,
+                       "mu": state.mu, "nu": state.nu, "master": state.master}
+        else:
+            payload = {"step": state.step, "params": state.params,
+                       "opt": dict(state.opt._asdict())}
+        self.ckpt.save(step, payload, process=self.process,
+                       extra={"data_state": self.loader.snapshot()})

@@ -1,0 +1,125 @@
+"""DDL collective schedules (multi-device via subprocess): hierarchical ==
+flat == arithmetic mean; the compiled HLO contains the paper's RS/AR/AG
+sequence; compressed DCN error stays within the int8 bound; time model."""
+import pytest
+
+from repro.core.ddl.topology import (ddl_allreduce_time, flat_allreduce_time,
+                                     fabrics)
+from tests.util import run_py
+
+
+def test_topology_time_model_beats_flat():
+    """The paper's Fig 1: hierarchical beats flat, more so at scale."""
+    for nbytes in (1e6, 1e8, 1e9):
+        flat = flat_allreduce_time(nbytes, (2, 16))
+        ddl = ddl_allreduce_time(nbytes, data=16, pods=2)
+        assert ddl < flat, (nbytes, ddl, flat)
+    speedup = flat_allreduce_time(4e8, (2, 16)) / ddl_allreduce_time(
+        4e8, data=16, pods=2)
+    assert speedup > 1.5  # paper reports 1.6x over NCCL
+
+
+def test_compression_reduces_dcn_time():
+    base = ddl_allreduce_time(1e9, data=16, pods=2, compress_dcn=False)
+    comp = ddl_allreduce_time(1e9, data=16, pods=2, compress_dcn=True)
+    assert comp < base
+
+
+HIER = """
+import jax, jax.numpy as jnp, numpy as np, re
+from jax.sharding import PartitionSpec as P
+from repro.config.base import DDLConfig
+from repro.core.ddl import ddl_reduce_tree
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+tree = {"a": jnp.arange(24., dtype=jnp.float32).reshape(4, 6),
+        "b": {"w": jnp.ones((3, 5), jnp.bfloat16)}}
+for topo in (True, False):
+    cfg = DDLConfig(mode="allreduce", topology_aware=topo)
+    def f(t):
+        return ddl_reduce_tree(t, cfg, data_axis="data", pod_axis="pod",
+                               data_size=2, pod_size=2)[0]
+    sm = jax.shard_map(f, mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), tree),),
+                       out_specs=jax.tree.map(lambda _: P(), tree),
+                       check_vma=False, axis_names={"pod", "data"})
+    c = jax.jit(sm).lower(tree).compile()
+    out = c(tree)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]["w"], np.float32), 1.0, rtol=1e-2)
+    kinds = sorted(set(re.findall(
+        r"\\b(all-gather|all-reduce|reduce-scatter)\\b", c.as_text())))
+    if topo:
+        assert kinds == ["all-gather", "all-reduce", "reduce-scatter"], kinds
+    else:
+        assert kinds == ["all-reduce"], kinds
+print("HIER-OK")
+"""
+
+
+def test_hierarchical_schedule_and_value():
+    assert "HIER-OK" in run_py(HIER, devices=8)
+
+
+COMPRESS = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.ddl.compress import compressed_allreduce_pod, compress
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+x = jnp.asarray(np.random.default_rng(0).standard_normal(4096), jnp.float32)
+def f(v):
+    out, _ = compressed_allreduce_pod(v, "pod")
+    return out
+sm = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                   check_vma=False, axis_names={"pod"})
+out = jax.jit(sm)(x)
+# exact sum is 2x; int8 error bound: 2 * amax/127/2 per bucket
+err = np.abs(np.asarray(out) - 2 * np.asarray(x))
+amax = np.abs(np.asarray(x)).max()
+assert err.max() <= 2 * (amax / 127 * 0.5 + 1e-5), err.max()
+print("COMPRESS-OK")
+"""
+
+
+def test_compressed_pod_allreduce():
+    assert "COMPRESS-OK" in run_py(COMPRESS, devices=8)
+
+
+ZERO1 = """
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.config.base import TrainConfig, ShapeConfig, MeshSpec, DDLConfig
+from repro.train.steps import (build_train_step, init_train_state,
+                               build_zero1_train_step, init_zero1_state)
+from repro.launch.mesh import make_mesh
+mesh_spec = MeshSpec((2, 2, 2), ("pod", "data", "model"))
+mesh = make_mesh(mesh_spec)
+cfg = get_smoke_config("olmo-1b")
+model = Model(cfg, attn_impl="naive")
+shape = ShapeConfig("smoke", "train", 32, 8)
+tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
+                   ddl=DDLConfig(mode="allreduce"), warmup_steps=1,
+                   learning_rate=1e-2, total_steps=50)
+batch = {"tokens": jnp.ones((8, 32), jnp.int32),
+         "labels": jnp.ones((8, 32), jnp.int32)}
+f1, sh1, bsh = build_train_step(model, tcfg, mesh, donate=False)
+s1 = jax.device_put(init_train_state(model, tcfg, jax.random.key(0)), sh1)
+f2, sh2, _, _ = build_zero1_train_step(model, tcfg, mesh, donate=False)
+s2 = jax.device_put(init_zero1_state(model, tcfg, jax.random.key(0), 2), sh2)
+batch = jax.device_put(batch, bsh)
+for i in range(4):
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f2(s2, batch)
+    # identical math, different reduction order (per-leaf vs flat-packed):
+    # trajectories may drift by f32 rounding, nothing more
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3, (i, m1, m2)
+assert float(m1["loss"]) < 4.7
+print("ZERO1-OK")
+"""
+
+
+def test_zero1_equals_paper_mode():
+    """DDL-ZeRO1 (update between RS and AG) must match the paper's
+    RS->AR->AG + replicated-optimizer schedule step for step."""
+    assert "ZERO1-OK" in run_py(ZERO1, devices=8)

@@ -1,0 +1,59 @@
+"""Flash-attention Pallas kernel vs pure-jnp oracle (interpret mode),
+swept over shapes, GQA ratios, dtypes, masking modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+CASES = [
+    # b, h, kh, sq, skv, d, causal, window, bq, bk
+    (2, 4, 2, 128, 128, 64, True, 0, 64, 64),
+    (1, 4, 4, 64, 256, 32, True, 0, 32, 64),
+    (1, 8, 2, 128, 128, 64, True, 32, 64, 64),
+    (2, 2, 1, 96, 96, 16, False, 0, 64, 64),
+    (1, 2, 2, 100, 80, 32, False, 0, 64, 64),
+    (1, 1, 1, 256, 256, 128, True, 0, 128, 128),
+    (1, 6, 3, 64, 64, 64, True, 16, 32, 32),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_vs_ref(case):
+    b, h, kh, sq, skv, d, causal, window, bq, bk = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kh, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kh, skv, d)), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+    assert out.dtype == dtype
+
+
+def test_flash_numerical_stability():
+    """Large logits must not overflow the online softmax."""
+    q = jnp.full((1, 1, 64, 32), 30.0, jnp.float32)
+    k = jnp.full((1, 1, 64, 32), 30.0, jnp.float32)
+    v = jnp.ones((1, 1, 64, 32), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

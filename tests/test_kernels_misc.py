@@ -1,0 +1,62 @@
+"""rmsnorm + quantize kernels vs oracles, with hypothesis property tests on
+the quantization invariants (DDL compression correctness bounds)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quantize.kernel import dequantize_fwd, quantize_fwd
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 64), (100, 64), (256, 256), (1, 8)])
+def test_rmsnorm_kernel(rows, cols):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal(cols), jnp.float32)
+    out = rmsnorm_fwd(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("rows,cols", [(4, 32), (64, 1024), (3, 7)])
+def test_quantize_kernel_matches_ref(rows, cols):
+    rng = np.random.default_rng(rows * 31 + cols)
+    x = jnp.asarray(rng.standard_normal((rows, cols)) * 10, jnp.float32)
+    qk, sk = quantize_fwd(x, interpret=True)
+    qr, sr = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    dk = dequantize_fwd(qk, sk, interpret=True)
+    dr = dequantize_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 64), st.integers(0, 2**31 - 1),
+       st.floats(0.01, 1e4))
+def test_quantize_error_bound(rows, cols, seed, scale):
+    """|x - dequant(quant(x))| <= amax/127/2 + eps, per row (hypothesis)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * scale).astype(np.float32)
+    q, s = quantize_ref(jnp.asarray(x))
+    dq = np.asarray(dequantize_ref(q, s))
+    amax = np.abs(x).max(axis=1)
+    bound = amax / 127.0 * 0.5 + 1e-6 + amax * 1e-6
+    err = np.abs(dq - x).max(axis=1)
+    assert (err <= bound + 1e-7).all(), (err, bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_sign_and_zero(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((4, 32)).astype(np.float32)
+    x[0] = 0.0
+    q, s = quantize_ref(jnp.asarray(x))
+    dq = np.asarray(dequantize_ref(q, s))
+    assert (dq[0] == 0).all()
+    big = np.abs(x) > np.abs(x).max(axis=1, keepdims=True) * 0.05
+    assert (np.sign(dq[big]) == np.sign(x[big])).all()

@@ -1,0 +1,54 @@
+"""MoE dispatch: capacity-based gather/scatter vs dense-fallback oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.layers import tree_init
+from repro.models.moe import apply_moe, apply_moe_dense_fallback, moe_defs
+from repro.config.base import override
+
+
+def _setup(capacity_factor):
+    cfg = override(get_smoke_config("qwen3-moe-235b-a22b"),
+                   moe_capacity_factor=capacity_factor)
+    params = tree_init(jax.random.key(0), moe_defs(cfg))
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 16, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    return cfg, params, x
+
+
+def test_capacity_dispatch_matches_dense_when_ample():
+    # capacity_factor = E/k covers all-tokens-to-one-expert -> no drops
+    cfg0 = get_smoke_config("qwen3-moe-235b-a22b")
+    cfg, params, x = _setup(
+        capacity_factor=cfg0.num_experts / cfg0.experts_per_token)
+    y_cap, aux = apply_moe(cfg, params, x)
+    y_dense = apply_moe_dense_fallback(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_dense),
+                               atol=2e-5, rtol=2e-5)
+    assert float(aux) > 0
+
+
+def test_low_capacity_drops_but_finite():
+    cfg, params, x = _setup(capacity_factor=0.5)
+    y, aux = apply_moe(cfg, params, x)
+    assert np.isfinite(np.asarray(y)).all()
+    # dropped tokens give zero output rows at most, not NaNs
+    dense = apply_moe_dense_fallback(cfg, params, x)
+    assert float(jnp.abs(y).sum()) <= float(jnp.abs(dense).sum()) * 1.5
+
+
+def test_moe_grads_flow():
+    cfg, params, x = _setup(capacity_factor=2.0)
+
+    def loss(p):
+        y, aux = apply_moe(cfg, p, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    gsum = sum(float(jnp.abs(l.astype(jnp.float32)).sum())
+               for l in jax.tree.leaves(g))
+    assert np.isfinite(gsum) and gsum > 0
+    # router must receive gradient (through combine weights + aux loss)
+    assert float(jnp.abs(g["router"].astype(jnp.float32)).sum()) > 0

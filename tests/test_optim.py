@@ -1,0 +1,73 @@
+"""Optimizer: AdamW against a numpy reference, SGD-momentum, global-norm
+clipping, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw_init, adamw_update, sgdm_init, sgdm_update,
+                         clip_by_global_norm, global_norm, warmup_cosine)
+
+
+def np_adamw(params, grads, m, v, step, lr, b1, b2, eps, wd):
+    m = b1 * m + (1 - b1) * grads
+    v = b2 * v + (1 - b2) * grads ** 2
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    return params - lr * (mhat / (np.sqrt(vhat) + eps) + wd * params), m, v
+
+
+def test_adamw_matches_numpy():
+    rng = np.random.default_rng(0)
+    p0 = rng.standard_normal((4, 4)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = adamw_init(params)
+    pn, mn, vn = p0.copy(), np.zeros_like(p0), np.zeros_like(p0)
+    for step in range(1, 5):
+        g = rng.standard_normal((4, 4)).astype(np.float32)
+        params, state = adamw_update({"w": jnp.asarray(g)}, state, params,
+                                     lr=1e-2, beta1=0.9, beta2=0.95,
+                                     weight_decay=0.1)
+        pn, mn, vn = np_adamw(pn, g, mn, vn, step, 1e-2, 0.9, 0.95, 1e-8, 0.1)
+        np.testing.assert_allclose(np.asarray(params["w"]), pn, atol=1e-5)
+
+
+def test_adamw_bf16_params_fp32_master():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state.master["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 1e-3, jnp.float32)}
+    for _ in range(10):
+        params, state = adamw_update(g, state, params, lr=1e-5)
+    # master accumulates below bf16 resolution; params stay bf16
+    assert params["w"].dtype == jnp.bfloat16
+    assert float(jnp.abs(state.master["w"] - 1.0).max()) > 0
+
+
+def test_sgdm():
+    params = {"w": jnp.zeros((3,), jnp.float32)}
+    state = sgdm_init(params)
+    g = {"w": jnp.ones((3,), jnp.float32)}
+    params, state = sgdm_update(g, state, params, lr=0.1, beta1=0.9)
+    np.testing.assert_allclose(np.asarray(params["w"]), -0.1, atol=1e-6)
+    params, state = sgdm_update(g, state, params, lr=0.1, beta1=0.9)
+    np.testing.assert_allclose(np.asarray(params["w"]), -0.1 - 0.19, atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), 10.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    same, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0, rtol=1e-6)
+
+
+def test_warmup_cosine_shape():
+    lr0 = warmup_cosine(jnp.int32(0), base_lr=1.0, warmup_steps=10, total_steps=100)
+    lr5 = warmup_cosine(jnp.int32(5), base_lr=1.0, warmup_steps=10, total_steps=100)
+    lr10 = warmup_cosine(jnp.int32(10), base_lr=1.0, warmup_steps=10, total_steps=100)
+    lr100 = warmup_cosine(jnp.int32(100), base_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr0) == 0.0 and abs(float(lr5) - 0.5) < 1e-6
+    assert abs(float(lr10) - 1.0) < 1e-6
+    assert abs(float(lr100) - 0.1) < 1e-6  # min_ratio floor

@@ -1,0 +1,66 @@
+"""Fault-tolerance runtime: failure detection, straggler stats, restart
+backoff, elastic replanning."""
+import time
+
+import pytest
+
+from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, ShapeConfig,
+                               TrainConfig)
+from repro.configs import get_smoke_config
+from repro.runtime import (FailureDetector, HeartbeatStore, RestartPolicy,
+                           replan_mesh, apply_decision)
+from repro.runtime.fault import Heartbeat
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = HeartbeatStore(str(tmp_path))
+    hb.beat(0, 10, 0.5)
+    hb.beat(1, 10, 0.6)
+    beats = hb.read_all()
+    assert set(beats) == {0, 1}
+    assert beats[0].step == 10
+
+
+def test_failure_detection(tmp_path):
+    det = FailureDetector(timeout=60.0)
+    now = time.time()
+    beats = {0: Heartbeat(0, 5, now, 0.5), 1: Heartbeat(1, 5, now - 120, 0.5)}
+    dead, _ = det.check(beats, expected=[0, 1, 2], now=now)
+    assert set(dead) == {1, 2}  # 1 stale, 2 never beat
+
+
+def test_straggler_detection():
+    det = FailureDetector(timeout=60.0, straggler_factor=2.0)
+    now = time.time()
+    beats = {i: Heartbeat(i, 5, now, 0.5) for i in range(4)}
+    beats[3] = Heartbeat(3, 5, now, 2.0)  # 4x median
+    dead, strag = det.check(beats, expected=list(range(4)), now=now)
+    assert dead == [] and strag == [3]
+
+
+def test_restart_backoff():
+    pol = RestartPolicy(max_restarts=3, backoff_base=2.0)
+    delays = [pol.next_delay() for _ in range(4)]
+    assert delays[:3] == [1.0, 2.0, 4.0]
+    assert delays[3] is None  # budget exhausted
+
+
+def _tcfg(mesh):
+    return TrainConfig(model=get_smoke_config("olmo-1b"),
+                       shape=ShapeConfig("t", "train", 32, 8), mesh=mesh)
+
+
+def test_elastic_shrink_preserves_global_batch():
+    cfg = _tcfg(MeshSpec((16, 16), ("data", "model")))
+    dec = replan_mesh(cfg, devices_available=128)  # lost half the pod
+    assert dict(zip(dec.mesh.axes, dec.mesh.shape))["model"] == 16
+    assert dict(zip(dec.mesh.axes, dec.mesh.shape))["data"] == 8
+    assert dec.microbatches == 2  # 2x accumulation keeps global batch
+    cfg2 = apply_decision(cfg, dec)
+    assert cfg2.mesh == dec.mesh
+
+
+def test_elastic_cannot_break_tp():
+    cfg = _tcfg(MeshSpec((16, 16), ("data", "model")))
+    with pytest.raises(RuntimeError):
+        replan_mesh(cfg, devices_available=8)  # < TP degree

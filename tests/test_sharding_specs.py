@@ -1,0 +1,60 @@
+"""Sharding spec machinery: logical rules, pruning (divisibility), planner
+spec interplay, DDL scatter-dim choice."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.ddl.allreduce import _choose_scatter_dim
+from repro.models.sharding import (DEFAULT_RULES, prune_spec, rules_without,
+                                   spec as mkspec, shard_factor)
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+        self.axis_names = tuple(sizes)
+
+
+def test_spec_mapping():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    assert mkspec("batch", None, "heads", mesh=mesh) == P("data", None, "model")
+    assert mkspec("vocab", "d_model", mesh=mesh) == P("model")
+
+
+def test_spec_multi_axis_batch():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert mkspec("batch", mesh=mesh) == P(("pod", "data"))
+
+
+def test_rules_without_strips_manual_axes():
+    r = rules_without(("pod", "data"))
+    assert r["batch"] == ()
+    assert r["heads"] == ("model",)
+
+
+def test_prune_spec_divisibility():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 6 kv heads not divisible by 16 -> replicated
+    assert prune_spec((4, 6, 64), P(None, "model"), mesh) == P()
+    # 64 divisible -> kept
+    assert prune_spec((4, 64, 64), P(None, "model"), mesh) == P(None, "model")
+    # batch 1 on 16-way axis -> dropped
+    assert prune_spec((1, 32), P("data"), mesh) == P()
+
+
+def test_shard_factor():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert shard_factor(mesh, "batch") == 32
+    assert shard_factor(mesh, "heads") == 16
+    assert shard_factor(mesh, "seq") == 1
+
+
+def test_ddl_scatter_dim_choice():
+    # dim0 sharded over model -> use dim1 when divisible
+    assert _choose_scatter_dim((50304, 64), P("model", None), 16) == 1
+    # stacked layer dim divisible -> dim0
+    assert _choose_scatter_dim((80, 8192, 64), P(None, None, "model"), 16) == 0
+    # nothing divisible & unsharded -> None (psum fallback)
+    assert _choose_scatter_dim((3, 5), P(), 16) is None
+    # model-sharded dims are skipped even when divisible
+    assert _choose_scatter_dim((32,), P("model"), 16) is None
