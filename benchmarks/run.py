@@ -18,6 +18,7 @@ def main() -> None:
     modules = [
         ("fig1", bench_ddl_allreduce.run),
         ("fig2b", bench_lms_overhead.run),
+        ("fig2bm", bench_lms_overhead.run_measured),
         ("tab1", bench_scaling.run),
         ("tab1m", bench_scaling.run_measured),
         ("kern", bench_kernels.run),

@@ -11,19 +11,19 @@ import sys
 CODE = """
 import re
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from jax.sharding import PartitionSpec as P
 from repro.config.base import DDLConfig
 from repro.core.ddl import ddl_reduce_tree
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 grads = {"w": jnp.ones((64, 64), jnp.float32)}
 for topo in (True, False):
     cfg = DDLConfig(mode="allreduce", topology_aware=topo)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda t: ddl_reduce_tree(t, cfg, data_axis="data", pod_axis="pod",
                                   data_size=2, pod_size=2)[0],
         mesh=mesh, in_specs=({"w": P()},), out_specs={"w": P()},
-        check_vma=False, axis_names={"pod", "data"})
+        check_vma=False, axis_names={"pod", "data", "model"})
     c = jax.jit(fn).lower(grads).compile()
     kinds = re.findall(r"\\b(all-gather|all-reduce|reduce-scatter)\\b", c.as_text())
     label = "DDL (topology-aware)" if topo else "flat (NCCL-style)"

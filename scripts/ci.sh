@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the exact command ROADMAP.md names, plus a collection check
+# so a module that silently stops importing (e.g. a missing optional dep)
+# fails CI instead of shrinking the suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection check =="
+python -m pytest --collect-only -q tests/ > /dev/null
+
+echo "== tier-1 =="
+python -m pytest -x -q

@@ -1,0 +1,151 @@
+"""Version-compat layer for jax API drift — the single module allowed to
+reference moved/renamed jax symbols (see DESIGN.md §4 for the policy).
+
+Everything else in the repo imports from here:
+
+  * ``make_mesh``            — `jax.make_mesh` grew/lost the ``axis_types``
+                               kwarg across releases (``jax.sharding.AxisType``
+                               does not exist before ~0.5); we request Auto
+                               axes when the installed jax supports the kwarg
+                               and omit it otherwise (older jax is Auto-only).
+  * ``shard_map``            — moved from `jax.experimental.shard_map` to
+                               `jax.shard_map`, renaming ``check_rep`` ->
+                               ``check_vma`` and inverting ``auto`` (the
+                               GSPMD-managed axes) into ``axis_names`` (the
+                               manual axes). We present the NEW calling
+                               convention and translate down when needed.
+  * ``tree``                 — `jax.tree` namespace (fallback: jax.tree_util).
+  * memory kinds             — `pinned_host` exists on TPU only; CPU exposes
+                               just `unpinned_host`. ``has_memory_kind`` /
+                               ``host_memory_kind`` probe the default device
+                               so LMS residency degrades to a no-op where the
+                               platform has a single memory space.
+  * ``tpu_compiler_params``  — `pltpu.CompilerParams` was named
+                               ``TPUCompilerParams`` in older pallas.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Optional
+
+import jax
+
+# --------------------------------------------------------------------------
+# pytree namespace
+# --------------------------------------------------------------------------
+
+if hasattr(jax, "tree"):
+    tree = jax.tree
+else:  # pragma: no cover - very old jax
+    import jax.tree_util as tree  # type: ignore[no-redef]
+
+
+# --------------------------------------------------------------------------
+# Mesh construction
+# --------------------------------------------------------------------------
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None) if hasattr(jax, "sharding") else None
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """`jax.make_mesh` with every axis Auto (GSPMD-managed), on any jax.
+
+    Auto is this repo's only mode: the model is GSPMD-sharded while DDL takes
+    manual control per-shard_map, never per-mesh-axis-type. Newer jax makes
+    the axis type explicit; older jax has no notion of axis types (equivalent
+    to all-Auto), so the kwarg is simply dropped there.
+    """
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _MAKE_MESH_HAS_AXIS_TYPES and _AXIS_TYPE is not None:
+        kw["axis_types"] = (_AXIS_TYPE.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NEW_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _LEGACY_SHARD_MAP
+else:  # pragma: no cover - newer jax
+    _LEGACY_SHARD_MAP = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=frozenset(),
+              check_vma: bool = False):
+    """New-style `jax.shard_map` signature on any jax.
+
+    ``axis_names`` is the set of mesh axes the body is MANUAL over; all other
+    mesh axes stay GSPMD-auto. On older jax this is translated to the legacy
+    ``auto`` parameter (the complement set) and ``check_vma`` to its previous
+    name ``check_rep``.
+    """
+    manual = frozenset(axis_names) if axis_names else frozenset(mesh.axis_names)
+    if _NEW_SHARD_MAP is not None:  # pragma: no cover - newer jax
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma,
+                              axis_names=set(manual))
+    auto = frozenset(mesh.axis_names) - manual
+    return _LEGACY_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             auto=auto)
+
+
+# --------------------------------------------------------------------------
+# Memory kinds (host offload availability)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def available_memory_kinds() -> tuple:
+    """Memory kinds addressable by the default device (e.g. TPU: ('device',
+    'pinned_host'); CPU: ('unpinned_host',))."""
+    try:
+        dev = jax.devices()[0]
+        return tuple(m.kind for m in dev.addressable_memories())
+    except Exception:  # pragma: no cover - exotic backends
+        return ()
+
+
+def has_memory_kind(kind: str) -> bool:
+    return kind in available_memory_kinds()
+
+
+def host_memory_kind() -> Optional[str]:
+    """The host-side memory kind usable for LMS swap targets, or None when
+    the platform has a single memory space (then residency annotations are
+    meaningless and the executor degrades to plain on-device slicing)."""
+    if has_memory_kind("pinned_host") and has_memory_kind("device"):
+        return "pinned_host"
+    return None
+
+
+try:  # public from jax.sharding on newer releases
+    from jax.sharding import TransferToMemoryKind  # type: ignore
+except ImportError:  # pragma: no cover - 0.4.x location
+    from jax._src.sharding_impls import TransferToMemoryKind  # noqa: F401
+
+
+def to_memory_kind(x, kind: Optional[str]):
+    """Move a pytree to the given memory kind, preserving its sharding
+    (the LMS swap primitive: async copy-start/copy-done on TPU). Identity
+    when `kind` is None (single-memory-space platforms)."""
+    if kind is None:
+        return x
+    dst = TransferToMemoryKind(kind)
+    return tree.map(lambda v: jax.device_put(v, dst), x)
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params
+# --------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs):
+    """`pltpu.CompilerParams(**kwargs)` under whichever name this jax uses."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.config.base import DDLConfig
 from repro.core.ddl.compress import compressed_allreduce_pod
 
@@ -49,7 +50,7 @@ class PackSpec:
 
 
 def pack_spec(tree, pad_to: int) -> PackSpec:
-    leaves, treedef = jax.tree.flatten(tree)
+    leaves, treedef = compat.tree.flatten(tree)
     shapes = [l.shape for l in leaves]
     dtypes = [l.dtype for l in leaves]
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
@@ -57,7 +58,7 @@ def pack_spec(tree, pad_to: int) -> PackSpec:
 
 
 def pack(tree, spec: PackSpec, dtype=jnp.float32) -> jnp.ndarray:
-    leaves = jax.tree.leaves(tree)
+    leaves = compat.tree.leaves(tree)
     flat = jnp.concatenate([l.astype(dtype).reshape(-1) for l in leaves])
     return jnp.pad(flat, (0, spec.padded - spec.total))
 
@@ -67,7 +68,7 @@ def unpack(flat: jnp.ndarray, spec: PackSpec):
     for shape, dt, size in zip(spec.shapes, spec.dtypes, spec.sizes):
         out.append(flat[off:off + size].reshape(shape).astype(dt))
         off += size
-    return jax.tree.unflatten(spec.treedef, out)
+    return compat.tree.unflatten(spec.treedef, out)
 
 
 # ---------------------------------------------------------------------------
@@ -188,10 +189,10 @@ def ddl_reduce_tree(grads, cfg: DDLConfig, *, data_axis: str = "data",
     """
     if cfg.mode == "none":
         return grads, error_feedback
-    leaves, treedef = jax.tree.flatten(grads)
+    leaves, treedef = compat.tree.flatten(grads)
     if param_specs is not None:
         from jax.sharding import PartitionSpec
-        specs = jax.tree.flatten(param_specs,
+        specs = compat.tree.flatten(param_specs,
                                  is_leaf=lambda x: isinstance(x, PartitionSpec))[0]
     else:
         specs = [None] * len(leaves)
@@ -205,14 +206,14 @@ def ddl_reduce_tree(grads, cfg: DDLConfig, *, data_axis: str = "data",
         out.append(r.astype(g.dtype))
         new_ef.append(e)
     ef_out = new_ef if error_feedback is not None else None
-    return jax.tree.unflatten(treedef, out), ef_out
+    return compat.tree.unflatten(treedef, out), ef_out
 
 
 def init_error_feedback(grads_shapes, cfg: DDLConfig, data_size: int):
     """Zero per-leaf EF buffers (compressed replicated leaves only)."""
     if not (cfg.compress_dcn and cfg.topology_aware):
         return None
-    leaves = jax.tree.leaves(grads_shapes)
+    leaves = compat.tree.leaves(grads_shapes)
     return [jnp.zeros(_ef_shape(l.shape, data_size), jnp.float32)
             for l in leaves]
 

@@ -1,17 +1,18 @@
-"""Host-residency helpers: the explicit swap-out/swap-in side of LMS.
+"""Host-residency helpers: the explicit swap side of LMS.
 
-`host_sharding(...)` builds pinned-host shardings for params / optimizer
-state / KV caches; `stream_to_device` / `stream_to_host` are the swap ops
-(XLA lowers them to async copy-start/copy-done on TPU, overlappable with
-compute); `residency_shardings` applies a MemoryPlan's residency map to a
-param-spec tree so jit in_shardings place each tensor in the right space.
+`effective_kind` gates memory-kind annotations on platform support;
+`residency_shardings` applies a MemoryPlan's residency map to a param-spec
+tree so jit in_shardings place each tensor in the right space;
+`stream_layer_to_device` is the swap-in primitive the layer-streaming
+executor (models/transformer.py) issues inside the decoder scans — XLA
+lowers it to async copy-start/copy-done on TPU, overlappable with compute.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro import compat
 
 HOST = "pinned_host"
 DEVICE = "device"
@@ -20,40 +21,18 @@ DEVICE = "device"
 def effective_kind(kind):
     """Memory-kind annotations in jit in/out_shardings crash the XLA:CPU
     SPMD partitioner ("Side-effect HLO must have sharding"); they are a TPU
-    feature. Returns `kind` on TPU (or with REPRO_MEMORY_KINDS=1), else None
-    — host residency on CPU dry-runs is proven by the planner's analytic
-    model plus the device_put unit tests."""
+    feature. Returns `kind` when the default device actually exposes it as a
+    distinct memory space (or with REPRO_MEMORY_KINDS=1), else None — host
+    residency on CPU dry-runs is proven by the planner's analytic model plus
+    the device_put unit tests."""
     import os
 
-    import jax
     force = os.environ.get("REPRO_MEMORY_KINDS", "")
     if force == "1":
         return kind
     if force == "0":
         return None
-    return kind if jax.default_backend() == "tpu" else None
-
-
-def with_memory_kind(s: NamedSharding, kind: str) -> NamedSharding:
-    return s.with_memory_kind(kind)
-
-
-def host_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
-    return NamedSharding(mesh, spec, memory_kind=HOST)
-
-
-def device_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
-    return NamedSharding(mesh, spec, memory_kind=DEVICE)
-
-
-def stream_to_device(x, mesh: Mesh, spec: PartitionSpec):
-    """Swap-in: host -> HBM (inside jit; async on TPU)."""
-    return jax.device_put(x, device_sharding(mesh, spec))
-
-
-def stream_to_host(x, mesh: Mesh, spec: PartitionSpec):
-    """Swap-out: HBM -> host."""
-    return jax.device_put(x, host_sharding(mesh, spec))
+    return kind if compat.has_memory_kind(kind) else None
 
 
 def residency_shardings(spec_tree, mesh: Mesh, residency: dict, *,
@@ -63,16 +42,16 @@ def residency_shardings(spec_tree, mesh: Mesh, residency: dict, *,
     group: which residency key governs this tree ("params", "optimizer",
     "kvcache", "grads").
     """
-    kind = HOST if residency.get(group, DEVICE) == "host" else DEVICE
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s, memory_kind=kind), spec_tree,
+    kind = effective_kind(HOST) if residency.get(group, DEVICE) == "host" else None
+    return compat.tree.map(
+        lambda s: (NamedSharding(mesh, s, memory_kind=kind) if kind
+                   else NamedSharding(mesh, s)), spec_tree,
         is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
-def stream_layer_params(stacked_host_params, mesh: Mesh, spec_tree):
-    """Per-layer swap-in inside a lax.scan body: move one layer slice of a
-    host-stacked param tree into HBM. spec_tree holds the *unstacked* layer
-    specs."""
-    return jax.tree.map(
-        lambda x, s: stream_to_device(x, mesh, s), stacked_host_params, spec_tree,
-        is_leaf=lambda x: hasattr(x, "shape"))
+def stream_layer_to_device(layer_params):
+    """Swap-in one layer's tensor tree inside a scan body, preserving each
+    leaf's sharding (TransferToMemoryKind: host -> HBM, async on TPU).
+    Identity where the platform has one memory space, so the streamed graph
+    stays numerically byte-identical to the resident graph."""
+    return compat.to_memory_kind(layer_params, effective_kind(DEVICE))

@@ -28,6 +28,40 @@ class TensorClass:
     per_layer: bool = True
 
 
+@dataclass(frozen=True)
+class SwapSchedule:
+    """The planner→executor contract for host-resident tensor classes (see
+    DESIGN.md §3): WHICH classes stream per layer, HOW far ahead the executor
+    prefetches, and the layer visitation order of each sweep. The executor
+    (`models/transformer.py` streamed scans) follows this; the planner's
+    `swap_bytes_per_step` accounting assumes exactly one swap-in per layer
+    per sweep listed here.
+
+    The current executors implement exactly the canonical orders
+    make_swap_schedule emits — fwd `range(L)` via the scan, bwd
+    `reversed(range(L))` via remat of the scan body — so `fwd_order` /
+    `bwd_order` DESCRIBE the executed sweeps (and whether a bwd sweep exists
+    at all); arbitrary permutations are not supported and would be silently
+    ignored. A plan wanting a different visitation order needs executor
+    work, not just different tuples here."""
+    prefetch_depth: int = 2             # layers in flight (2 = double buffer)
+    stream: Tuple[str, ...] = ()        # subset of {"params", "kvcache"}
+    fwd_order: Tuple[int, ...] = ()     # layer indices, forward sweep
+    bwd_order: Tuple[int, ...] = ()     # backward sweep ((), for inference)
+
+    @property
+    def streams_params(self) -> bool:
+        return "params" in self.stream
+
+    @property
+    def streams_kvcache(self) -> bool:
+        return "kvcache" in self.stream
+
+    @property
+    def sweeps_per_step(self) -> int:
+        return (1 if self.fwd_order else 0) + (1 if self.bwd_order else 0)
+
+
 @dataclass
 class MemoryPlan:
     assignment: Dict[str, str]          # activation name -> save|offload|remat
@@ -38,6 +72,7 @@ class MemoryPlan:
     budget: int
     fits: bool
     notes: List[str] = field(default_factory=list)
+    swap_schedule: Optional[SwapSchedule] = None  # set iff something streams
 
     def summary(self) -> str:
         gb = 1024 ** 3
@@ -47,12 +82,31 @@ class MemoryPlan:
                  f"{self.swap_bytes_per_step/gb:.2f} GiB",
                  f"  residency: {self.residency}",
                  f"  activations: {self.assignment}"]
+        if self.swap_schedule is not None:
+            s = self.swap_schedule
+            lines.append(f"  swap schedule: stream={list(s.stream)} "
+                         f"prefetch={s.prefetch_depth} sweeps={s.sweeps_per_step}")
         lines += [f"  note: {n}" for n in self.notes]
         return "\n".join(lines)
 
 
 def _axis_size(mesh: MeshSpec, name: str) -> int:
     return dict(zip(mesh.axes, mesh.shape)).get(name, 1)
+
+
+def make_swap_schedule(residency: Dict[str, str], num_layers: int,
+                       kind: str, prefetch_depth: int = 2) -> Optional[SwapSchedule]:
+    """Derive the executor schedule from a residency map: every host-resident
+    streamable class streams once per sweep; training plans sweep fwd then
+    bwd (the remat of the layer body re-issues the swap-ins in reverse),
+    inference plans sweep fwd only. None when nothing streams."""
+    stream = tuple(k for k in ("params", "kvcache") if residency.get(k) == "host")
+    if not stream:
+        return None
+    fwd = tuple(range(num_layers))
+    bwd = tuple(reversed(fwd)) if kind == "train" else ()
+    return SwapSchedule(prefetch_depth=prefetch_depth, stream=stream,
+                        fwd_order=fwd, bwd_order=bwd)
 
 
 def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
@@ -204,7 +258,8 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
             residency["kvcache"] = "host"
             notes.append("KV cache host-resident, streamed per layer")
         return MemoryPlan({}, residency, int(peak), int(host),
-                          int(swap_per_step), budget, peak <= budget, notes)
+                          int(swap_per_step), budget, peak <= budget, notes,
+                          swap_schedule=make_swap_schedule(residency, L, shape.kind))
 
     # ---- training -----------------------------------------------------------
     acts = activation_classes(cfg, shape, mesh)
@@ -283,7 +338,8 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         params_dev_eff = params_dev
 
     return MemoryPlan(assignment, residency, int(peak), int(host),
-                      int(swap_per_step), budget, peak <= budget, notes)
+                      int(swap_per_step), budget, peak <= budget, notes,
+                      swap_schedule=make_swap_schedule(residency, L, shape.kind))
 
 
 def hbm_traffic_model(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,

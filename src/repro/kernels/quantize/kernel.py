@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -32,7 +34,7 @@ def quantize_fwd(x, *, block_rows: int = 256, interpret: bool = False):
                    pl.BlockSpec((br,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((rows, cols), jnp.int8),
                    jax.ShapeDtypeStruct((rows,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
 
@@ -53,6 +55,6 @@ def dequantize_fwd(q, scale, *, out_dtype=jnp.float32, block_rows: int = 256,
                   pl.BlockSpec((br,), lambda i: (i,))],
         out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(q, scale)

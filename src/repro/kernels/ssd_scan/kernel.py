@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hstate_ref, *,
                 chunk: int, seq_len: int):
@@ -90,7 +92,7 @@ def ssd_scan_fwd(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
         out_specs=pl.BlockSpec((1, q, 1, p), lambda b_, h_, c: (b_, c, h_, 0)),
         out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, B, C)

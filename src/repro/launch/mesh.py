@@ -6,21 +6,18 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-
+from repro import compat
 from repro.config.base import MeshSpec, SINGLE_POD, MULTI_POD
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(spec: MeshSpec):
-    return jax.make_mesh(spec.shape, spec.axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes))
+    return compat.make_mesh(spec.shape, spec.axes)
 
 
 def mesh_axis_sizes(mesh) -> dict:

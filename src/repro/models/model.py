@@ -123,8 +123,10 @@ class Model:
         return x
 
     # ---- train forward ----------------------------------------------------
-    def forward(self, params, batch, *, policy=None, no_remat=False):
-        """-> (logits [B,S,V], aux_loss)."""
+    def forward(self, params, batch, *, policy=None, no_remat=False,
+                stream=None):
+        """-> (logits [B,S,V], aux_loss). stream: SwapSchedule for the
+        layer-streaming executor (host-resident params swapped in per layer)."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
         seq = x.shape[1]
@@ -136,18 +138,20 @@ class Model:
             x = x + sinusoidal_positions(seq, cfg.d_model).astype(x.dtype)[None]
         x, aux = tr.apply_decoder(cfg, params["decoder"], x, ctx,
                                   policy=policy, no_remat=no_remat,
-                                  unroll=self.unroll)
+                                  unroll=self.unroll, stream=stream)
         x = apply_norm(cfg, params["final_norm"], x)
         return lm_logits(cfg, params["embed"], x), aux
 
     def loss(self, params, batch, *, policy=None, no_remat=False,
-             aux_weight: float = 0.01):
-        logits, aux = self.forward(params, batch, policy=policy, no_remat=no_remat)
+             aux_weight: float = 0.01, stream=None):
+        logits, aux = self.forward(params, batch, policy=policy,
+                                   no_remat=no_remat, stream=stream)
         ce = cross_entropy(logits, batch["labels"])
         return ce + aux_weight * aux, {"ce": ce, "aux": aux}
 
     # ---- serving ----------------------------------------------------------
-    def prefill(self, params, batch, cache_len: Optional[int] = None):
+    def prefill(self, params, batch, cache_len: Optional[int] = None,
+                stream=None):
         """-> (last-token logits [B,V], cache)."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
@@ -160,12 +164,13 @@ class Model:
             ctx["enc_out"] = tr.apply_encoder(cfg, params["encoder"], enc, ctx)
             x = x + sinusoidal_positions(seq, cfg.d_model).astype(x.dtype)[None]
         x, cache, _ = tr.apply_decoder_prefill(cfg, params["decoder"], x, ctx,
-                                               cache_len, unroll=self.unroll)
+                                               cache_len, unroll=self.unroll,
+                                               stream=stream)
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x[:, -1:])
         return logits[:, 0], cache
 
-    def decode_step(self, params, cache, batch, pos):
+    def decode_step(self, params, cache, batch, pos, stream=None):
         """batch: {"tokens" [B,1]} (or vlm embeds); pos: scalar int32.
         -> (logits [B,V], new_cache)."""
         cfg = self.cfg
@@ -175,7 +180,8 @@ class Model:
             from repro.models.layers import sinusoidal_row
             x = x + sinusoidal_row(pos, cfg.d_model).astype(x.dtype)[None, None]
         x, new_cache = tr.apply_decoder_decode(cfg, params["decoder"], cache, x,
-                                               pos, ctx, unroll=self.unroll)
+                                               pos, ctx, unroll=self.unroll,
+                                               stream=stream)
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)
         return logits[:, 0], new_cache

@@ -10,7 +10,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.config.base import ModelConfig
+from repro.core.lms.offload import stream_layer_to_device
 from repro.core.lms.policies import tag
 from repro.models import attention as attn_mod
 from repro.models.attention import (attention_defs, project_qkv, out_proj,
@@ -159,17 +161,66 @@ def apply_layer(cfg, kind, p, x, ctx):
     raise ValueError(kind)
 
 
+def _stream_depth(stream, n_iter: int) -> int:
+    """Effective prefetch depth for a scan group: the schedule's depth when
+    it divides the trip count, else 1 (plain per-layer streaming)."""
+    d = max(int(getattr(stream, "prefetch_depth", 1)), 1)
+    return d if n_iter % d == 0 else 1
+
+
+def _scan_streamed(cfg, stack, carry, ctx, pattern, n_iter, *, policy,
+                   no_remat, stream):
+    """Layer-streaming executor for one scan group (the LMS swap, executed).
+
+    The stacked group params arrive host-resident (jit in_shardings carry the
+    pinned-host memory kind); the scan visits `prefetch_depth` layers per
+    iteration and issues ALL of the group's swap-ins before any of its
+    compute, so with depth 2 the copy of layer i+1 is in flight while layer i
+    computes — a double buffer XLA's latency-hiding scheduler can overlap.
+    The body is remat-wrapped as usual, which makes the backward sweep
+    re-issue the same swap-ins in reverse layer order (the mirrored bwd sweep
+    of SwapSchedule.bwd_order) instead of pinning all layers in HBM.
+    """
+    d = _stream_depth(stream, n_iter)
+    grouped = compat.tree.map(
+        lambda t: t.reshape((n_iter // d, d) + t.shape[1:]), stack)
+
+    def body(c, lp_group, _pattern=pattern, _d=d):
+        h, a = c
+        # swap-in first, compute second: the fetches are independent of the
+        # compute below, so copy k+1 overlaps compute k
+        bufs = [stream_layer_to_device(compat.tree.map(lambda t: t[k], lp_group))
+                for k in range(_d)]
+        for k in range(_d):
+            for i, kname in enumerate(_pattern):
+                h, da = apply_layer(cfg, kname, bufs[k][f"{kname}_{i}"], h, ctx)
+                a = a + da
+        return (h, a), None
+
+    if not no_remat:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    return jax.lax.scan(body, carry, grouped)[0]
+
+
 def apply_decoder(cfg, params, x, ctx, *, policy=None, no_remat=False,
-                  unroll: bool = False):
+                  unroll: bool = False, stream=None):
     """-> (x, aux_loss). Scans pattern groups with optional remat policy.
     unroll=True fully unrolls the layer scan — used by the dry-run so
     compiled.cost_analysis() counts every layer (XLA tallies a while-loop
-    body once, ignoring the trip count)."""
+    body once, ignoring the trip count). stream: a SwapSchedule whose
+    params class streams — switches the scan groups to the layer-streaming
+    executor (host-resident params, per-layer double-buffered swap-in)."""
     aux = jnp.float32(0.0)
     for gi, entry in enumerate(stack_plan(cfg)):
         if entry[0] == "scan":
             _, pattern, n_iter = entry
             stack = params[f"stack{gi}"]
+
+            if stream is not None and not unroll:
+                x, aux = _scan_streamed(cfg, stack, (x, aux), ctx, pattern,
+                                        n_iter, policy=policy,
+                                        no_remat=no_remat, stream=stream)
+                continue
 
             def body(carry, lp, _pattern=pattern):
                 h, a = carry
@@ -351,8 +402,10 @@ def apply_layer_prefill(cfg, kind, p, x, ctx, cache_len: int):
 
 
 def apply_decoder_prefill(cfg, params, x, ctx, cache_len: int,
-                          unroll: bool = False):
-    """-> (x, cache, aux). Scanned groups also emit stacked caches."""
+                          unroll: bool = False, stream=None):
+    """-> (x, cache, aux). Scanned groups also emit stacked caches.
+    stream: SwapSchedule — host-resident params are swapped in per layer
+    (depth 1 in serving: the per-layer cache emission pins the scan shape)."""
     aux = jnp.float32(0.0)
     cache = {}
     for gi, entry in enumerate(stack_plan(cfg)):
@@ -362,6 +415,8 @@ def apply_decoder_prefill(cfg, params, x, ctx, cache_len: int,
 
             def body(carry, lp, _pattern=pattern):
                 h, a = carry
+                if stream is not None and stream.streams_params:
+                    lp = stream_layer_to_device(lp)
                 caches = {}
                 for i, k in enumerate(_pattern):
                     h, c, da = apply_layer_prefill(cfg, k, lp[f"{k}_{i}"], h, ctx, cache_len)
@@ -442,8 +497,11 @@ def apply_layer_decode(cfg, kind, p, x, cache, pos, ctx):
 
 
 def apply_decoder_decode(cfg, params, caches, x, pos, ctx,
-                         unroll: bool = False):
-    """-> (x, new_caches)."""
+                         unroll: bool = False, stream=None):
+    """-> (x, new_caches). stream: SwapSchedule — host-resident params and/or
+    KV cache are swapped in per layer inside the scan (depth 1: the cache is
+    threaded through the same scan, so there is exactly one live layer slot).
+    The updated cache's swap-OUT is the jit out_shardings' host placement."""
     new_caches = {}
     for gi, entry in enumerate(stack_plan(cfg)):
         if entry[0] == "scan":
@@ -452,6 +510,10 @@ def apply_decoder_decode(cfg, params, caches, x, pos, ctx,
 
             def body(h, inp, _pattern=pattern):
                 lp, lc = inp
+                if stream is not None and stream.streams_params:
+                    lp = stream_layer_to_device(lp)
+                if stream is not None and stream.streams_kvcache:
+                    lc = stream_layer_to_device(lc)
                 ncs = {}
                 for i, k in enumerate(_pattern):
                     h, ncs[f"{k}_{i}"] = apply_layer_decode(

@@ -19,12 +19,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config.base import TrainConfig
 from repro.core.ddl.allreduce import (ddl_reduce_tree,
                                       hierarchical_reduce_scatter_flat,
                                       pack, pack_spec, unpack, PackSpec)
 from repro.core.lms.planner import MemoryPlan, plan_memory, plan_to_policy
-from repro.core.lms import offload as lms_offload
 from repro.core.lms.offload import effective_kind
 from repro.launch.mesh import dp_axes, mesh_axis_sizes
 from repro.models.model import Model
@@ -37,6 +37,21 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
     params: Any
     opt: Any
+
+
+def _param_stream(plan: Optional[MemoryPlan]):
+    """The plan's SwapSchedule iff it streams params — the switch that turns
+    host residency (a placement) into layer streaming (an execution
+    strategy) inside the decoder scans."""
+    if plan is None or plan.swap_schedule is None:
+        return None
+    return plan.swap_schedule if plan.swap_schedule.streams_params else None
+
+
+def _serving_stream(plan: Optional[MemoryPlan]):
+    """SwapSchedule for the serving scans, which can stream params AND the
+    KV cache (the decode scan threads both per layer)."""
+    return plan.swap_schedule if plan is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +69,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     pod_size = sizes.get("pod", 1)
     pod_axis = "pod" if "pod" in sizes and pod_size > 1 else None
     policy = plan_to_policy(plan) if plan is not None else None
+    stream = _param_stream(plan)
     opt_init, opt_update = OPTIMIZERS[tcfg.optimizer]
     sched = SCHEDULES["warmup_cosine"]
 
@@ -61,7 +77,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
 
     def loss_fn(params, batch):
         with sharding_env(mesh, rules=inner_rules):
-            loss, metrics = model.loss(params, batch, policy=policy)
+            loss, metrics = model.loss(params, batch, policy=policy,
+                                       stream=stream)
         return loss, metrics
 
     def grads_of(params, batch):
@@ -113,7 +130,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     batch_manual = bshards
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
-    step_sm = jax.shard_map(
+    step_sm = compat.shard_map(
         per_replica, mesh=mesh,
         in_specs=(state_specs_manual, batch_manual),
         out_specs=(state_specs_manual, metric_specs),
@@ -189,6 +206,7 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
     pod_size = sizes.get("pod", 1)
     pod_axis = "pod" if pod_size > 1 else None
     policy = plan_to_policy(plan) if plan is not None else None
+    stream = _param_stream(plan)
     sched = SCHEDULES["warmup_cosine"]
 
     shapes, pspecs = model.abstract_params(mesh)
@@ -200,7 +218,8 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
 
     def loss_fn(params, batch):
         with sharding_env(mesh, rules=inner_rules):
-            loss, metrics = model.loss(params, batch, policy=policy)
+            loss, metrics = model.loss(params, batch, policy=policy,
+                                       stream=stream)
         return loss, metrics
 
     def per_replica(state: Zero1State, batch):
@@ -241,10 +260,10 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
     batch_manual = bshards
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
-    step_sm = jax.shard_map(per_replica, mesh=mesh,
-                            in_specs=(state_manual, batch_manual),
-                            out_specs=(state_manual, metric_specs),
-                            check_vma=False, axis_names=set(dpa))
+    step_sm = compat.shard_map(per_replica, mesh=mesh,
+                               in_specs=(state_manual, batch_manual),
+                               out_specs=(state_manual, metric_specs),
+                               check_vma=False, axis_names=set(dpa))
 
     residency = plan.residency if plan is not None else {}
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
@@ -296,9 +315,12 @@ def build_prefill_step(model: Model, shape, mesh, plan=None):
         lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
         else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
 
+    stream = _serving_stream(plan)
+
     def prefill(params, batch):
         with sharding_env(mesh):
-            return model.prefill(params, batch, cache_len=shape.seq_len)
+            return model.prefill(params, batch, cache_len=shape.seq_len,
+                                 stream=stream)
 
     fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
                  out_shardings=(NamedSharding(mesh, P()), cache_sh))
@@ -322,9 +344,11 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
         lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
         else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
 
+    stream = _serving_stream(plan)
+
     def decode(params, cache, batch, pos):
         with sharding_env(mesh, rules=rules):
-            return model.decode_step(params, cache, batch, pos)
+            return model.decode_step(params, cache, batch, pos, stream=stream)
 
     fn = jax.jit(decode,
                  in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),

@@ -2,7 +2,7 @@
 (hypothesis), mmap reader."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.util import given, settings, st
 
 from repro.data import DataLoader, DataState, MMapTokens, SyntheticTokens
 

@@ -3,7 +3,7 @@ the quantization invariants (DDL compression correctness bounds)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.util import given, settings, st
 
 from repro.kernels.quantize.kernel import dequantize_fwd, quantize_fwd
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref

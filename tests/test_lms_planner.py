@@ -1,7 +1,7 @@
 """LMS planner invariants (hypothesis property tests) + behaviour on the
 assigned architectures."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.util import given, settings, st
 
 from repro import hw as hwlib
 from repro.config.base import (SHAPES, SINGLE_POD, MULTI_POD, LMSConfig,

@@ -1,0 +1,180 @@
+"""Layer-streaming executor: the streamed-params graph must be numerically
+identical to the resident-params graph (they differ only by placement ops,
+which are identity-valued on a single memory space), and the planner must
+emit a well-formed SwapSchedule (the planner→executor contract)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import (LMSConfig, MeshSpec, ShapeConfig, SHAPES,
+                               SINGLE_POD, TrainConfig, DDLConfig)
+from repro.configs import get_config, get_smoke_config
+from repro.core.lms.planner import (MemoryPlan, SwapSchedule,
+                                    make_swap_schedule, plan_memory)
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+
+
+# ---------------------------------------------------------------------------
+# SwapSchedule unit tests
+# ---------------------------------------------------------------------------
+
+def test_make_swap_schedule_fields():
+    sched = make_swap_schedule({"params": "host"}, 6, "train")
+    assert sched.streams_params and not sched.streams_kvcache
+    assert sched.prefetch_depth == 2
+    assert sched.fwd_order == tuple(range(6))
+    assert sched.bwd_order == tuple(reversed(range(6)))
+    assert sched.sweeps_per_step == 2
+
+
+def test_make_swap_schedule_inference_has_no_bwd_sweep():
+    sched = make_swap_schedule({"params": "host", "kvcache": "host"}, 4, "decode")
+    assert sched.stream == ("params", "kvcache")
+    assert sched.fwd_order == (0, 1, 2, 3)
+    assert sched.bwd_order == ()
+    assert sched.sweeps_per_step == 1
+
+
+def test_make_swap_schedule_none_when_nothing_streams():
+    assert make_swap_schedule({"params": "device"}, 8, "train") is None
+
+
+def test_planner_emits_schedule_for_offloaded_models():
+    plan = plan_memory(get_config("qwen2-72b"), SHAPES["train_4k"], SINGLE_POD,
+                       LMSConfig())
+    assert plan.residency["params"] == "host"
+    sched = plan.swap_schedule
+    assert sched is not None and sched.streams_params
+    assert len(sched.fwd_order) == get_config("qwen2-72b").num_layers
+    assert sched.bwd_order == tuple(reversed(sched.fwd_order))
+    assert "stream" in plan.summary()
+
+
+def test_planner_no_schedule_for_resident_models():
+    plan = plan_memory(get_config("olmo-1b"), SHAPES["train_4k"], SINGLE_POD,
+                       LMSConfig())
+    assert plan.residency["params"] == "device"
+    assert plan.swap_schedule is None
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence: streamed == resident
+# ---------------------------------------------------------------------------
+
+def _tiny_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_streamed_loss_and_grads_match_resident(depth):
+    """depth=1 keeps the scan structure of the resident path: bitwise
+    identical. depth=2 regroups the scan to 2 layers per body (the double
+    buffer) — same math, same op order per layer, but XLA fuses the
+    restructured loop differently and bf16 rounding shifts; assert
+    bf16-level closeness there."""
+    cfg = get_smoke_config("olmo-1b")  # 2 layers: depth 2 exercises grouping
+    model = Model(cfg, attn_impl="naive")
+    params = model.init(jax.random.key(0))
+    batch = _tiny_batch(cfg)
+    sched = SwapSchedule(prefetch_depth=depth, stream=("params",),
+                         fwd_order=tuple(range(cfg.num_layers)),
+                         bwd_order=tuple(reversed(range(cfg.num_layers))))
+
+    def loss_resident(p):
+        return model.loss(p, batch)[0]
+
+    def loss_streamed(p):
+        return model.loss(p, batch, stream=sched)[0]
+
+    l0, g0 = jax.jit(jax.value_and_grad(loss_resident))(params)
+    l1, g1 = jax.jit(jax.value_and_grad(loss_streamed))(params)
+    if depth == 1:
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    else:
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=2e-3, atol=2e-3)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-2)
+
+
+def test_streamed_train_step_matches_resident():
+    """Full step builder: a plan that streams params must produce the same
+    trajectory as no plan at all (placement differs, math must not)."""
+    from repro.train.steps import build_train_step, init_train_state
+
+    cfg = get_smoke_config("olmo-1b")
+    model = Model(cfg, attn_impl="naive")
+    mesh = make_mesh(MeshSpec((1, 1), ("data", "model")))
+    shape = ShapeConfig("smoke", "train", 16, 2)
+    tcfg = TrainConfig(model=cfg, shape=shape,
+                       mesh=MeshSpec((1, 1), ("data", "model")),
+                       ddl=DDLConfig(mode="allreduce"), warmup_steps=1,
+                       learning_rate=1e-2, total_steps=10)
+    L = cfg.num_layers
+    streaming_plan = MemoryPlan(
+        assignment={}, residency={"params": "host", "grads": "device",
+                                  "optimizer": "device", "kvcache": "device"},
+        peak_bytes=1, host_bytes=1, swap_bytes_per_step=1, budget=1, fits=True,
+        swap_schedule=make_swap_schedule({"params": "host"}, L, "train",
+                                         prefetch_depth=1))
+
+    batch = _tiny_batch(cfg, b=2, s=16)
+    losses = []
+    for plan in (None, streaming_plan):
+        fn, ssh, bsh = build_train_step(model, tcfg, mesh, plan=plan,
+                                        donate=False)
+        state = jax.device_put(init_train_state(model, tcfg, jax.random.key(1)),
+                               ssh)
+        b = jax.device_put(batch, bsh)
+        ms = []
+        for _ in range(3):
+            state, m = fn(state, b)
+            ms.append(float(m["loss"]))
+        losses.append(ms)
+    # prefetch_depth=1 preserves the scan structure: identical trajectories
+    np.testing.assert_array_equal(np.asarray(losses[0]), np.asarray(losses[1]))
+
+
+def test_streamed_prefill_decode_match_resident():
+    cfg = get_smoke_config("olmo-1b")
+    model = Model(cfg, attn_impl="naive")
+    params = model.init(jax.random.key(2))
+    rng = np.random.default_rng(3)
+    B, S = 2, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    # params AND kvcache stream: decode fetches both per layer
+    sched = make_swap_schedule({"params": "host", "kvcache": "host"},
+                               cfg.num_layers, "decode")
+    assert sched.streams_params and sched.streams_kvcache
+
+    outs = []
+    for stream in (None, sched):
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=S + 4, stream=stream))(
+                params, {"tokens": toks[:, :S]})
+        lg, _ = jax.jit(
+            lambda p, c, b, pos: model.decode_step(p, c, b, pos, stream=stream))(
+                params, cache, {"tokens": toks[:, S:S + 1]}, jnp.int32(S))
+        outs.append((np.asarray(logits, np.float32), np.asarray(lg, np.float32)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
+def test_stream_depth_fallback_when_not_divisible():
+    """3 layers with prefetch_depth=2 must fall back to per-layer streaming
+    (depth 1), not drop or duplicate a layer."""
+    from repro.models.transformer import _stream_depth
+    sched = SwapSchedule(prefetch_depth=2, stream=("params",))
+    assert _stream_depth(sched, 3) == 1
+    assert _stream_depth(sched, 4) == 2

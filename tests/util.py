@@ -1,11 +1,86 @@
 """Test helpers: subprocess runner for multi-device (host-platform) tests —
 the XLA device-count flag must be set before jax initializes, so those tests
-run in their own interpreter."""
+run in their own interpreter — and a fixed-seed fallback for hypothesis so
+the property-test modules collect and run whether or not hypothesis is
+installed (import `given`/`settings`/`st` from here, never from hypothesis
+directly)."""
+import inspect
 import os
+import random
 import subprocess
 import sys
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: fixed-seed parametrize shim
+# ---------------------------------------------------------------------------
+#
+# When hypothesis is available we re-export the real thing. Otherwise `given`
+# degrades to pytest.mark.parametrize over a deterministic sample drawn from
+# each strategy with a fixed seed: no shrinking, no example database, but the
+# same test body runs over the same value domains, and the suite collects.
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    st = _FallbackStrategies()
+
+    def _parametrize(fn, strategies, n):
+        rng = random.Random(0xC0FFEE)
+        single = len(strategies) == 1
+        cases = [(strategies[0].example(rng) if single else
+                  tuple(s.example(rng) for s in strategies))
+                 for _ in range(n)]
+        # real hypothesis fills positional @given args from the RIGHT, so a
+        # test with extra leading params (fixtures) keeps working; match that
+        names = list(inspect.signature(fn).parameters)[-len(strategies):]
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+    def given(*strategies):
+        # Always draws _DEFAULT_EXAMPLES cases; `settings` (below) is a
+        # no-op in the fallback, so @settings(max_examples=...) above a
+        # @given keeps working without double-parametrizing the function
+        # (pytest.mark.parametrize mutates fn.pytestmark in place).
+        def deco(fn):
+            return _parametrize(fn, strategies, _DEFAULT_EXAMPLES)
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 520) -> str:
