@@ -5,6 +5,15 @@ Two sources: (a) the analytic fabric time model (ICI/DCN ring formulas),
 which is the TPU re-derivation of the paper's measurement; (b) real compiled
 HLO on 8 host devices confirming the schedules the compiler actually emits
 (RS+AR+AG vs single AR) and wall-clock on CPU for the small sizes.
+
+`run_measured` adds the overlapped-backward row (mirrors
+bench_lms_overhead's streamed-vs-resident format): the same train step with
+the DDL reduction issued per layer inside the backward scan vs post-hoc,
+plus a no-reduction baseline to isolate the reduction cost, reporting the
+fraction of it the overlap hid. XLA:CPU schedules collectives synchronously
+— there is nothing to hide behind on that backend — so the fraction is
+reported n/a there (same convention as bench_lms_overhead) alongside the
+planner's analytic TPU-fabric expectation.
 """
 import time
 
@@ -51,6 +60,89 @@ def run():
     return rows
 
 
+_MEASURE = """
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.config.base import TrainConfig, ShapeConfig, MeshSpec, DDLConfig
+from repro.train.steps import build_train_step, init_train_state
+from repro.launch.mesh import make_mesh
+mesh_spec = MeshSpec((2, 4), ("pod", "data"))
+mesh = make_mesh(mesh_spec)
+cfg = get_smoke_config("olmo-1b")
+model = Model(cfg, attn_impl="naive")
+shape = ShapeConfig("bench", "train", 32, 8)
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+def timed(mode, overlap):
+    tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
+                       ddl=DDLConfig(mode=mode), warmup_steps=1,
+                       learning_rate=1e-3, total_steps=100)
+    fn, ssh, bsh = build_train_step(model, tcfg, mesh, donate=False,
+                                    overlap_grads=overlap)
+    st = jax.device_put(init_train_state(model, tcfg, jax.random.key(0)), ssh)
+    b = jax.device_put(batch, bsh)
+    st, m = fn(st, b)                    # compile + warm up
+    jax.block_until_ready(m)
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        st, m = fn(st, b)
+        jax.block_until_ready(m)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+t_none = timed("none", False)
+t_serial = timed("allreduce", False)
+t_overlap = timed("allreduce", True)
+print(f"RESULT backend={jax.default_backend()} t_none={t_none} "
+      f"t_serial={t_serial} t_overlap={t_overlap}")
+"""
+
+
+def run_measured():
+    """Overlapped vs serialized DDL reduction, EXECUTED on 8 host devices
+    (the device-count flag must be set before jax initializes, so the
+    measurement runs in its own interpreter — tests/util.run_py, the same
+    harness bench_scaling reuses)."""
+    from tests.util import run_py
+    stdout = run_py(_MEASURE, devices=8)
+    line = next(l for l in stdout.splitlines() if l.startswith("RESULT"))
+    kv = dict(f.split("=") for f in line.split()[1:])
+    t_none, t_serial, t_overlap = (float(kv[k]) for k in
+                                   ("t_none", "t_serial", "t_overlap"))
+    reduction = max(t_serial - t_none, 0.0)
+    if kv["backend"] == "cpu":
+        hidden_txt = ("hidden_frac=n/a (XLA:CPU schedules collectives "
+                      "synchronously: nothing overlaps)")
+    else:
+        hidden = min(max((t_serial - t_overlap) / max(reduction, 1e-12), 0.0),
+                     1.0)
+        hidden_txt = f"hidden_frac={hidden:.2f}"
+    # the analytic TPU-fabric expectation for the same shape of step
+    from repro.config.base import MeshSpec, ShapeConfig
+    from repro.configs import get_config
+    from repro.core.lms.planner import price_grad_reduction
+    pcfg = get_config("qwen2.5-14b")
+    pshape = ShapeConfig("x1", "train", 4096, 256)
+    pmesh = MeshSpec((2, 16, 8), ("pod", "data", "model"))
+    t_ser_a, t_ovl_a = price_grad_reduction(pcfg, pshape, pmesh,
+                                            hwlib.TPU_V5E)
+    return [{
+        "name": "ddl_overlap_step_measured",
+        "us_per_call": t_overlap * 1e6,
+        "derived": f"none={t_none*1e6:.0f}us serialized={t_serial*1e6:.0f}us "
+                   f"overlapped={t_overlap*1e6:.0f}us "
+                   f"reduction_cost={reduction*1e6:.0f}us {hidden_txt} "
+                   f"(analytic qwen2.5-14b on 2x16x8 v5e: serialized "
+                   f"{t_ser_a*1e3:.1f}ms -> overlapped {t_ovl_a*1e3:.1f}ms, "
+                   f"{(1 - t_ovl_a / max(t_ser_a, 1e-12)) * 100:.0f}% hidden)",
+    }]
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run_measured():
         print(",".join(str(r[k]) for k in ("name", "us_per_call", "derived")))

@@ -1,43 +1,100 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes a ``BENCH_*.json``
+snapshot (the perf trajectory CI tracks).
 
-  Fig 1   -> bench_ddl_allreduce   (DDL vs flat all-reduce)
+  Fig 1   -> bench_ddl_allreduce   (DDL vs flat all-reduce; overlapped row)
   Fig 2b  -> bench_lms_overhead    (LMS overhead vs problem scale)
   Tab 1/Fig 3 -> bench_scaling     (DP scaling, modeled + measured)
   Tab 2 / s3.1 -> bench_accuracy_parity (convergence parity)
   kernels -> bench_kernels         (hot-spot microbenchmarks)
+
+``--smoke`` runs only the fast analytic tables (no jit compiles, no
+subprocess measurements) and writes BENCH_smoke.json — the CI gate. Either
+mode fails (exit 1) if any bench module does not import: a bench that
+silently stops importing would otherwise just vanish from the trajectory.
 """
+import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (REPO, os.path.join(REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _import_modules():
+    """Import every bench module up front; an ImportError anywhere is fatal
+    (exit 1), not a silently shrunk benchmark table."""
+    import importlib
+    names = ["bench_ddl_allreduce", "bench_lms_overhead", "bench_scaling",
+             "bench_kernels", "bench_accuracy_parity"]
+    mods = {}
+    failures = []
+    for n in names:
+        try:
+            mods[n] = importlib.import_module(f"benchmarks.{n}")
+        except Exception as e:
+            failures.append((n, e))
+            traceback.print_exc()
+    if failures:
+        for n, e in failures:
+            print(f"IMPORT-FAILED,{n},{type(e).__name__}: {e}",
+                  file=sys.stderr)
+        sys.exit(1)
+    return mods
 
 
 def main() -> None:
-    from benchmarks import (bench_ddl_allreduce, bench_kernels,
-                            bench_lms_overhead, bench_scaling)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast analytic benches only; writes BENCH_smoke.json")
+    ap.add_argument("--out", default=None,
+                    help="override the BENCH json path")
+    args = ap.parse_args()
+
+    b = _import_modules()
+    if args.smoke:
+        modules = [
+            ("fig1", b["bench_ddl_allreduce"].run),
+            ("fig2b", b["bench_lms_overhead"].run),
+            ("tab1", b["bench_scaling"].run),
+        ]
+    else:
+        modules = [
+            ("fig1", b["bench_ddl_allreduce"].run),
+            ("fig1m", b["bench_ddl_allreduce"].run_measured),
+            ("fig2b", b["bench_lms_overhead"].run),
+            ("fig2bm", b["bench_lms_overhead"].run_measured),
+            ("tab1", b["bench_scaling"].run),
+            ("tab1m", b["bench_scaling"].run_measured),
+            ("kern", b["bench_kernels"].run),
+            ("tab2", b["bench_accuracy_parity"].run),
+        ]
     print("name,us_per_call,derived")
-    modules = [
-        ("fig1", bench_ddl_allreduce.run),
-        ("fig2b", bench_lms_overhead.run),
-        ("fig2bm", bench_lms_overhead.run_measured),
-        ("tab1", bench_scaling.run),
-        ("tab1m", bench_scaling.run_measured),
-        ("kern", bench_kernels.run),
-    ]
-    # accuracy parity spawns subprocesses — keep it last and optional
-    try:
-        from benchmarks import bench_accuracy_parity
-        modules.append(("tab2", bench_accuracy_parity.run))
-    except Exception:
-        pass
-    failures = 0
+    rows, failures = [], 0
     for tag, fn in modules:
         try:
             for r in fn():
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+                rows.append({"table": tag, **{k: r[k] for k in
+                                              ("name", "us_per_call",
+                                               "derived")}})
         except Exception as e:
             failures += 1
             print(f"{tag}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
             traceback.print_exc()
+    out = args.out or os.path.join(
+        REPO, f"BENCH_{'smoke' if args.smoke else 'full'}.json")
+    with open(out, "w") as f:
+        json.dump({"mode": "smoke" if args.smoke else "full",
+                   "unix_time": int(time.time()),
+                   "failures": failures,
+                   "rows": rows}, f, indent=1)
+    print(f"wrote {out} ({len(rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the exact command ROADMAP.md names, plus a collection check
 # so a module that silently stops importing (e.g. a missing optional dep)
-# fails CI instead of shrinking the suite.
+# fails CI instead of shrinking the suite, plus a bench smoke stage that
+# writes BENCH_smoke.json (the perf trajectory) and fails on bench-script
+# import errors.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,6 +11,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== collection check =="
 python -m pytest --collect-only -q tests/ > /dev/null
+
+echo "== bench smoke =="
+python benchmarks/run.py --smoke
+test -s BENCH_smoke.json
 
 echo "== tier-1 =="
 python -m pytest -x -q

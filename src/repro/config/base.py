@@ -222,6 +222,11 @@ class DDLConfig:
     compress_dcn: bool = False        # int8 + error feedback on pod hop
     bucket_mb: int = 64               # gradient bucketing for overlap
     topology_aware: bool = True       # False => flat NCCL-style single all-reduce
+    # per-layer reduction inside the backward scan (core/ddl/overlap.py)
+    # vs a post-hoc tree pass. None = auto: follow the LMS planner's priced
+    # recommendation when a plan is present, else overlap. Explicit
+    # True/False overrides the planner.
+    overlap_grads: Optional[bool] = None
 
 
 @dataclass(frozen=True)

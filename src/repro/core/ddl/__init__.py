@@ -6,9 +6,17 @@ from repro.core.ddl.allreduce import (ddl_reduce_tree, flat_allreduce,
 from repro.core.ddl.topology import (ddl_allreduce_time, flat_allreduce_time,
                                      fabrics, AXIS_FABRIC)
 from repro.core.ddl.compress import compress, decompress, compressed_allreduce_pod
+from repro.core.ddl.overlap import (ShardSpec, allgather_local_shards,
+                                    collect_local_shards,
+                                    make_grad_reduce_hook, make_stack_hooks,
+                                    pack_global, reduce_tree_bucketed,
+                                    shard_spec, unpack_global)
 
 __all__ = ["ddl_reduce_tree", "flat_allreduce", "hierarchical_allreduce_flat",
            "hierarchical_reduce_scatter_flat", "init_error_feedback",
            "make_buckets", "pack", "unpack", "pack_spec", "ddl_allreduce_time",
            "flat_allreduce_time", "fabrics", "AXIS_FABRIC", "compress",
-           "decompress", "compressed_allreduce_pod"]
+           "decompress", "compressed_allreduce_pod", "ShardSpec",
+           "allgather_local_shards", "collect_local_shards",
+           "make_grad_reduce_hook", "make_stack_hooks", "pack_global",
+           "reduce_tree_bucketed", "shard_spec", "unpack_global"]

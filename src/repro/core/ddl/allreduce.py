@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro import compat
 from repro.config.base import DDLConfig
@@ -191,7 +192,6 @@ def ddl_reduce_tree(grads, cfg: DDLConfig, *, data_axis: str = "data",
         return grads, error_feedback
     leaves, treedef = compat.tree.flatten(grads)
     if param_specs is not None:
-        from jax.sharding import PartitionSpec
         specs = compat.tree.flatten(param_specs,
                                  is_leaf=lambda x: isinstance(x, PartitionSpec))[0]
     else:

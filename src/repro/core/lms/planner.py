@@ -48,6 +48,13 @@ class SwapSchedule:
     stream: Tuple[str, ...] = ()        # subset of {"params", "kvcache"}
     fwd_order: Tuple[int, ...] = ()     # layer indices, forward sweep
     bwd_order: Tuple[int, ...] = ()     # backward sweep ((), for inference)
+    # DDL reduction issued per layer inside the bwd sweep (the reduced grad
+    # is what streams out as the next layer's params stream in) vs one
+    # post-hoc pass after the sweep. Descriptive copy of the plan's decision
+    # for readers of the executor contract; `MemoryPlan.overlap_grads` is
+    # the authoritative field the step builders resolve against (reduction
+    # overlap applies whether or not anything streams).
+    overlap_grads: bool = True
 
     @property
     def streams_params(self) -> bool:
@@ -73,6 +80,9 @@ class MemoryPlan:
     fits: bool
     notes: List[str] = field(default_factory=list)
     swap_schedule: Optional[SwapSchedule] = None  # set iff something streams
+    # priced recommendation for train plans (None for inference / dp==1):
+    # True iff per-layer in-scan reduction beats the post-hoc pass
+    overlap_grads: Optional[bool] = None
 
     def summary(self) -> str:
         gb = 1024 ** 3
@@ -86,6 +96,9 @@ class MemoryPlan:
             s = self.swap_schedule
             lines.append(f"  swap schedule: stream={list(s.stream)} "
                          f"prefetch={s.prefetch_depth} sweeps={s.sweeps_per_step}")
+        if self.overlap_grads is not None:
+            lines.append(f"  grad reduction: "
+                         f"{'overlapped' if self.overlap_grads else 'serialized'}")
         lines += [f"  note: {n}" for n in self.notes]
         return "\n".join(lines)
 
@@ -95,7 +108,8 @@ def _axis_size(mesh: MeshSpec, name: str) -> int:
 
 
 def make_swap_schedule(residency: Dict[str, str], num_layers: int,
-                       kind: str, prefetch_depth: int = 2) -> Optional[SwapSchedule]:
+                       kind: str, prefetch_depth: int = 2,
+                       overlap_grads: bool = True) -> Optional[SwapSchedule]:
     """Derive the executor schedule from a residency map: every host-resident
     streamable class streams once per sweep; training plans sweep fwd then
     bwd (the remat of the layer body re-issues the swap-ins in reverse),
@@ -106,7 +120,8 @@ def make_swap_schedule(residency: Dict[str, str], num_layers: int,
     fwd = tuple(range(num_layers))
     bwd = tuple(reversed(fwd)) if kind == "train" else ()
     return SwapSchedule(prefetch_depth=prefetch_depth, stream=stream,
-                        fwd_order=fwd, bwd_order=bwd)
+                        fwd_order=fwd, bwd_order=bwd,
+                        overlap_grads=overlap_grads and kind == "train")
 
 
 def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
@@ -177,6 +192,49 @@ def layer_flops_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec) -> flo
     return flops
 
 
+def price_grad_reduction(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                         hw: "hwlib.HardwareSpec" = None, *,
+                         compress_dcn: bool = False,
+                         microbatches: int = 1) -> Tuple[float, float]:
+    """(serialized_s, overlapped_s): the post-hoc monolithic DDL reduce vs
+    per-layer reduction issued inside the backward sweep.
+
+    Serialized: one ddl_allreduce_time over the full f32 gradient volume,
+    entirely exposed after the last layer's backward.  Overlapped: L
+    collectives of 1/L the volume, each hidden behind one layer of backward
+    compute (~2x the forward FLOPs); only the excess of a layer's reduction
+    over its backward compute — plus the final layer's reduction, which has
+    nothing left to hide behind — is exposed.  Per-layer collectives pay the
+    ring latency L times, so tiny models on high-latency fabrics can price
+    serialized cheaper; that is the point of pricing it.
+
+    With gradient accumulation the asymmetry grows: the serialized path
+    reduces ONCE after all microbatches, while the overlapped hooks
+    reduce-scatter inside every microbatch's backward — `microbatches`x the
+    fabric volume (each occurrence overlapped with that microbatch's
+    compute). Fabric-bound configs with deep accumulation price serialized
+    cheaper, and the planner should say so."""
+    from repro.core.ddl.topology import ddl_allreduce_time
+    hw = hw or hwlib.DEFAULT
+    data = _axis_size(mesh, "data")
+    pods = _axis_size(mesh, "pod")
+    if data * pods <= 1:
+        return 0.0, 0.0
+    tp = max(_axis_size(mesh, "model"), 1)
+    gbytes = 4.0 * cfg.param_count() / tp          # reductions run in f32
+    serialized = ddl_allreduce_time(gbytes, data, pods,
+                                    compress_dcn=compress_dcn, hw=hw)
+    L = max(cfg.num_layers, 1)
+    m = max(microbatches, 1)
+    t_layer = ddl_allreduce_time(gbytes / L, data, pods,
+                                 compress_dcn=compress_dcn, hw=hw)
+    mb_shape = dataclasses.replace(
+        shape, global_batch=max(shape.global_batch // m, 1))
+    bwd_layer = 2.0 * layer_flops_dev(cfg, mb_shape, mesh) / hw.peak_flops_bf16
+    exposed_per_mb = (L - 1) * max(0.0, t_layer - bwd_layer) + t_layer
+    return serialized, m * exposed_per_mb
+
+
 def kv_cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                        rules=None) -> int:
     dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
@@ -209,7 +267,7 @@ def kv_cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
 def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                 lms: LMSConfig = LMSConfig(), hw: hwlib.HardwareSpec = hwlib.DEFAULT,
                 optimizer: str = "adamw", zero1: bool = False,
-                rules=None) -> MemoryPlan:
+                rules=None, microbatches: int = 1) -> MemoryPlan:
     budget = (lms.hbm_budget or hw.hbm_bytes)
     budget = int(budget * (1.0 - lms.workspace_frac))
     tp = _axis_size(mesh, "model")
@@ -337,9 +395,22 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         peak = fixed() + saved_bytes()
         params_dev_eff = params_dev
 
+    overlap_grads: Optional[bool] = None
+    if shape.kind == "train" and dp * _axis_size(mesh, "pod") > 1:
+        t_ser, t_ovl = price_grad_reduction(cfg, shape, mesh, hw,
+                                            microbatches=microbatches)
+        overlap_grads = t_ovl <= t_ser
+        notes.append(f"grad reduction priced: overlapped {t_ovl*1e3:.2f}ms vs "
+                     f"serialized {t_ser*1e3:.2f}ms "
+                     f"(microbatches={max(microbatches, 1)}) -> "
+                     f"{'overlap' if overlap_grads else 'serialize'}")
+
     return MemoryPlan(assignment, residency, int(peak), int(host),
                       int(swap_per_step), budget, peak <= budget, notes,
-                      swap_schedule=make_swap_schedule(residency, L, shape.kind))
+                      swap_schedule=make_swap_schedule(
+                          residency, L, shape.kind,
+                          overlap_grads=bool(overlap_grads)),
+                      overlap_grads=overlap_grads)
 
 
 def hbm_traffic_model(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,

@@ -124,9 +124,11 @@ class Model:
 
     # ---- train forward ----------------------------------------------------
     def forward(self, params, batch, *, policy=None, no_remat=False,
-                stream=None):
+                stream=None, grad_hooks=None):
         """-> (logits [B,S,V], aux_loss). stream: SwapSchedule for the
-        layer-streaming executor (host-resident params swapped in per layer)."""
+        layer-streaming executor (host-resident params swapped in per layer).
+        grad_hooks: per-stack-group DDL reduce-as-you-go hooks (overlapped
+        backward — see core/ddl/overlap.py)."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
         seq = x.shape[1]
@@ -138,14 +140,16 @@ class Model:
             x = x + sinusoidal_positions(seq, cfg.d_model).astype(x.dtype)[None]
         x, aux = tr.apply_decoder(cfg, params["decoder"], x, ctx,
                                   policy=policy, no_remat=no_remat,
-                                  unroll=self.unroll, stream=stream)
+                                  unroll=self.unroll, stream=stream,
+                                  grad_hooks=grad_hooks)
         x = apply_norm(cfg, params["final_norm"], x)
         return lm_logits(cfg, params["embed"], x), aux
 
     def loss(self, params, batch, *, policy=None, no_remat=False,
-             aux_weight: float = 0.01, stream=None):
+             aux_weight: float = 0.01, stream=None, grad_hooks=None):
         logits, aux = self.forward(params, batch, policy=policy,
-                                   no_remat=no_remat, stream=stream)
+                                   no_remat=no_remat, stream=stream,
+                                   grad_hooks=grad_hooks)
         ce = cross_entropy(logits, batch["labels"])
         return ce + aux_weight * aux, {"ce": ce, "aux": aux}
 

@@ -169,7 +169,7 @@ def _stream_depth(stream, n_iter: int) -> int:
 
 
 def _scan_streamed(cfg, stack, carry, ctx, pattern, n_iter, *, policy,
-                   no_remat, stream):
+                   no_remat, stream, grad_hook=None):
     """Layer-streaming executor for one scan group (the LMS swap, executed).
 
     The stacked group params arrive host-resident (jit in_shardings carry the
@@ -180,17 +180,25 @@ def _scan_streamed(cfg, stack, carry, ctx, pattern, n_iter, *, policy,
     The body is remat-wrapped as usual, which makes the backward sweep
     re-issue the same swap-ins in reverse layer order (the mirrored bwd sweep
     of SwapSchedule.bwd_order) instead of pinning all layers in HBM.
+
+    grad_hook: identity-forward reduce-as-you-go wrapper (DDL overlapped
+    backward, core/ddl/overlap.py) applied per layer AFTER the swap-in, so in
+    the backward sweep the cotangent is DDL-reduced on device first and only
+    then hits the swap-in's transpose (the device→host grad stream-out):
+    grads stream out reduced as the next layer's params stream in.
     """
     d = _stream_depth(stream, n_iter)
     grouped = compat.tree.map(
         lambda t: t.reshape((n_iter // d, d) + t.shape[1:]), stack)
 
-    def body(c, lp_group, _pattern=pattern, _d=d):
+    def body(c, lp_group, _pattern=pattern, _d=d, _hook=grad_hook):
         h, a = c
         # swap-in first, compute second: the fetches are independent of the
         # compute below, so copy k+1 overlaps compute k
         bufs = [stream_layer_to_device(compat.tree.map(lambda t: t[k], lp_group))
                 for k in range(_d)]
+        if _hook is not None:
+            bufs = [_hook(b) for b in bufs]
         for k in range(_d):
             for i, kname in enumerate(_pattern):
                 h, da = apply_layer(cfg, kname, bufs[k][f"{kname}_{i}"], h, ctx)
@@ -203,27 +211,34 @@ def _scan_streamed(cfg, stack, carry, ctx, pattern, n_iter, *, policy,
 
 
 def apply_decoder(cfg, params, x, ctx, *, policy=None, no_remat=False,
-                  unroll: bool = False, stream=None):
+                  unroll: bool = False, stream=None, grad_hooks=None):
     """-> (x, aux_loss). Scans pattern groups with optional remat policy.
     unroll=True fully unrolls the layer scan — used by the dry-run so
     compiled.cost_analysis() counts every layer (XLA tallies a while-loop
     body once, ignoring the trip count). stream: a SwapSchedule whose
     params class streams — switches the scan groups to the layer-streaming
-    executor (host-resident params, per-layer double-buffered swap-in)."""
+    executor (host-resident params, per-layer double-buffered swap-in).
+    grad_hooks: {stack group name -> reduce-as-you-go hook} — the DDL
+    overlapped backward (per-layer gradient reduction issued inside the
+    scan's backward sweep instead of a post-hoc tree pass)."""
     aux = jnp.float32(0.0)
     for gi, entry in enumerate(stack_plan(cfg)):
         if entry[0] == "scan":
             _, pattern, n_iter = entry
             stack = params[f"stack{gi}"]
+            hook = (grad_hooks or {}).get(f"stack{gi}")
 
             if stream is not None and not unroll:
                 x, aux = _scan_streamed(cfg, stack, (x, aux), ctx, pattern,
                                         n_iter, policy=policy,
-                                        no_remat=no_remat, stream=stream)
+                                        no_remat=no_remat, stream=stream,
+                                        grad_hook=hook)
                 continue
 
-            def body(carry, lp, _pattern=pattern):
+            def body(carry, lp, _pattern=pattern, _hook=hook):
                 h, a = carry
+                if _hook is not None:
+                    lp = _hook(lp)
                 for i, k in enumerate(_pattern):
                     h, da = apply_layer(cfg, k, lp[f"{k}_{i}"], h, ctx)
                     a = a + da

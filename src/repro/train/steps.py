@@ -8,6 +8,20 @@ Two DDL integration modes:
   * "zero1"     — beyond-paper: stop at the reduce-scattered shard, update a
     1/|data| optimizer shard, all-gather *params*. Optimizer state lives as
     flat fp32 vectors sharded over `data`.
+
+Both default to the OVERLAPPED backward (core/ddl/overlap.py): the decoder
+scan groups carry reduce-as-you-go hooks, so each layer's DDL collectives
+are issued inside the backward sweep — overlapping fabric time with the
+remaining backward compute — and only the small unscanned remainder
+(embedding, final norm, unrolled tail layers, encoder) goes through the
+post-hoc `ddl_reduce_tree` pass. With gradient accumulation the
+microbatch accumulator holds reduce-scattered 1/|data| shards instead of a
+full fp32 gradient tree (one all-gather after the last microbatch), and
+zero1 optimizer state lives in the matching shard-major `ShardSpec` layout.
+`overlap_grads` resolution: explicit builder arg > explicit
+`DDLConfig.overlap_grads` > `MemoryPlan.overlap_grads` (the planner's
+priced recommendation) > overlap; forced off when the DP extent is 1 or
+`ddl.mode == "none"`.
 """
 from __future__ import annotations
 
@@ -24,6 +38,7 @@ from repro.config.base import TrainConfig
 from repro.core.ddl.allreduce import (ddl_reduce_tree,
                                       hierarchical_reduce_scatter_flat,
                                       pack, pack_spec, unpack, PackSpec)
+from repro.core.ddl import overlap as ddl_overlap
 from repro.core.lms.planner import MemoryPlan, plan_memory, plan_to_policy
 from repro.core.lms.offload import effective_kind
 from repro.launch.mesh import dp_axes, mesh_axis_sizes
@@ -55,12 +70,78 @@ def _serving_stream(plan: Optional[MemoryPlan]):
 
 
 # ---------------------------------------------------------------------------
+# Overlapped backward plumbing
+# ---------------------------------------------------------------------------
+
+def _resolve_overlap(arg: Optional[bool], plan: Optional[MemoryPlan],
+                     tcfg: TrainConfig, dp_total: int) -> bool:
+    """Explicit builder arg > explicit DDLConfig knob > planner's priced
+    recommendation > overlap; forced off with nothing to reduce (dp 1) or
+    no reduction at all."""
+    if tcfg.ddl.mode == "none" or dp_total <= 1:
+        return False
+    if arg is not None:
+        return bool(arg)
+    if tcfg.ddl.overlap_grads is not None:
+        return bool(tcfg.ddl.overlap_grads)
+    if plan is not None and plan.overlap_grads is not None:
+        return bool(plan.overlap_grads)
+    return True
+
+
+def _unstack_spec(s: P) -> P:
+    """Drop the leading ("layers") entry of a stacked param's PartitionSpec."""
+    t = tuple(s)
+    return P(*t[1:]) if t else P()
+
+
+def _stack_group_specs(pspecs) -> Dict[str, Any]:
+    """Per-layer PartitionSpec trees for each decoder scan group — what the
+    in-scan hook sees (the stacked layer axis sliced away)."""
+    return {k: compat.tree.map(_unstack_spec, v,
+                               is_leaf=lambda x: isinstance(x, P))
+            for k, v in pspecs["decoder"].items() if k.startswith("stack")}
+
+
+def _stacked_mask(tree):
+    """Matching bool pytree: True on leaves under decoder scan stacks (the
+    leaves the in-scan hooks reduce; their leading axis is the layer axis)."""
+    mark = lambda sub, flag: compat.tree.map(lambda _: flag, sub)
+    out = {k: mark(v, False) for k, v in tree.items() if k != "decoder"}
+    out["decoder"] = {k: mark(v, k.startswith("stack"))
+                      for k, v in tree["decoder"].items()}
+    return out
+
+
+def _split_stack_grads(tree):
+    """-> (stack-group subtrees, everything else with empty stacks)."""
+    dec = tree["decoder"]
+    stacks = {k: v for k, v in dec.items() if k.startswith("stack")}
+    rest = {**tree, "decoder": {k: v for k, v in dec.items()
+                                if not k.startswith("stack")}}
+    return stacks, rest
+
+
+def _merge_stack_grads(rest, stacks):
+    return {**rest, "decoder": {**rest["decoder"], **stacks}}
+
+
+# ---------------------------------------------------------------------------
 # Paper-faithful mode: DDL all-reduce, replicated optimizer
 # ---------------------------------------------------------------------------
 
+def _microbatch_split(batch, m: int):
+    """[B, ...] -> [m, B/m, ...] (broadcast leaves that don't split)."""
+    return compat.tree.map(
+        lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        if x.ndim >= 1 and x.shape[0] % m == 0 else
+        jnp.broadcast_to(x, (m,) + x.shape), batch)
+
+
 def build_train_step(model: Model, tcfg: TrainConfig, mesh,
                      plan: Optional[MemoryPlan] = None,
-                     donate: bool = True, rules: Optional[dict] = None):
+                     donate: bool = True, rules: Optional[dict] = None,
+                     overlap_grads: Optional[bool] = None):
     """-> (step_fn(state, batch) -> (state, metrics), in/out shardings)."""
     cfg = model.cfg
     sizes = mesh_axis_sizes(mesh)
@@ -72,44 +153,87 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     stream = _param_stream(plan)
     opt_init, opt_update = OPTIMIZERS[tcfg.optimizer]
     sched = SCHEDULES["warmup_cosine"]
+    m = tcfg.microbatches
+    mean_over = data_size * pod_size
+
+    pshapes, pspecs = model.abstract_params(mesh)
+    overlap = _resolve_overlap(overlap_grads, plan, tcfg, mean_over)
+    hooks = None
+    if overlap:
+        # per-layer reduce inside the scan backward; with accumulation the
+        # hooks keep only this rank's 1/|data| shard (no per-microbatch AG)
+        hooks = ddl_overlap.make_stack_hooks(
+            _stack_group_specs(pspecs), tcfg.ddl, data_axis="data",
+            pod_axis=pod_axis, data_size=data_size, pod_size=pod_size,
+            keep="shard" if m > 1 else "full")
+    if overlap and m > 1:
+        stacked = _stacked_mask(pshapes)
+        sspec = ddl_overlap.shard_spec(pshapes, data_size, stacked)
 
     inner_rules = rules_without(dpa, rules=rules)
 
     def loss_fn(params, batch):
         with sharding_env(mesh, rules=inner_rules):
             loss, metrics = model.loss(params, batch, policy=policy,
-                                       stream=stream)
+                                       stream=stream, grad_hooks=hooks)
         return loss, metrics
 
     def grads_of(params, batch):
-        if tcfg.microbatches > 1:
-            m = tcfg.microbatches
+        """-> (loss, metrics, grads). With overlap the decoder-stack grads
+        come back already reduced (fully for m==1; for m>1 the whole tree
+        is accumulated as reduce-scattered shards and all-gathered once)."""
+        if m > 1:
+            mb_batch = _microbatch_split(batch, m)
+            if overlap:
+                def micro(carry, mb):
+                    acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    loc = ddl_overlap.collect_local_shards(
+                        g, sspec, stacked, data_axis="data",
+                        pod_axis=pod_axis, mean_over=mean_over,
+                        compress_dcn=tcfg.ddl.compress_dcn)
+                    return (acc + loc, l_acc + l), None
+
+                acc0 = jnp.zeros((sspec.local_size,), jnp.float32)
+                (loc, l), _ = jax.lax.scan(micro, (acc0, jnp.float32(0.0)),
+                                           mb_batch)
+                g = ddl_overlap.allgather_local_shards(loc / m, sspec,
+                                                       data_axis="data")
+                return l / m, {"ce": l / m, "aux": jnp.float32(0.0)}, g
 
             def micro(carry, mb):
                 g_acc, l_acc = carry
                 (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+                return (compat.tree.map(jnp.add, g_acc, g), l_acc + l), None
 
-            mb_batch = jax.tree.map(
-                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:])
-                if x.ndim >= 1 and x.shape[0] % m == 0 else
-                jnp.broadcast_to(x, (m,) + x.shape), batch)
-            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero = compat.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (g, l), _ = jax.lax.scan(micro, (zero, jnp.float32(0.0)), mb_batch)
-            g = jax.tree.map(lambda x: x / m, g)
+            g = compat.tree.map(lambda x: x / m, g)
             return l / m, {"ce": l / m, "aux": jnp.float32(0.0)}, g
         (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return l, metrics, g
 
-    _, pspecs = model.abstract_params(mesh)
-
     def per_replica(state: TrainState, batch):
         params, opt_state = state.params, state.opt
         loss, metrics, grads = grads_of(params, batch)
-        # DDL: explicit topology-aware reduction over the DP axes
-        grads, _ = ddl_reduce_tree(grads, tcfg.ddl, data_axis="data",
-                                   pod_axis=pod_axis, data_size=data_size,
-                                   pod_size=pod_size, param_specs=pspecs)
+        if not overlap:
+            # DDL: post-hoc topology-aware reduction over the DP axes
+            grads, _ = ddl_reduce_tree(grads, tcfg.ddl, data_axis="data",
+                                       pod_axis=pod_axis, data_size=data_size,
+                                       pod_size=pod_size, param_specs=pspecs)
+        elif m == 1:
+            # in-scan hooks reduced the decoder stacks during the backward
+            # sweep; only the unscanned remainder goes through the tree pass
+            stacks, rest = _split_stack_grads(grads)
+            _, rest_specs = _split_stack_grads(pspecs)
+            rest, _ = ddl_reduce_tree(rest, tcfg.ddl, data_axis="data",
+                                      pod_axis=pod_axis, data_size=data_size,
+                                      pod_size=pod_size,
+                                      param_specs=rest_specs)
+            grads = _merge_stack_grads(rest, stacks)
+        # else: m > 1 overlapped — the sharded accumulator already returned
+        # the fully reduced tree
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         loss = jax.lax.pmean(loss, dpa)
         lr = sched(state.step, base_lr=tcfg.learning_rate,
@@ -121,7 +245,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
         return TrainState(state.step + 1, new_params, new_opt), out_metrics
 
     # shard_map: manual over DP axes only; GSPMD handles `model`
-    replicated = jax.tree.map(lambda _: P(), pspecs)
+    replicated = compat.tree.map(lambda _: P(), pspecs)
     opt_replicated = _opt_specs_like(opt_init, replicated)
     state_specs_manual = TrainState(P(), replicated, opt_replicated)
     _, bshards = model.input_specs(tcfg.shape, mesh)
@@ -138,12 +262,12 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
 
     # physical shardings for jit (TP over model; LMS residency memory kinds)
     state_shardings = make_state_shardings(model, tcfg, mesh, plan)
-    batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    batch_shardings = compat.tree.map(lambda s: NamedSharding(mesh, s), bshards)
     step_jit = jax.jit(
         step_sm,
         in_shardings=(state_shardings, batch_shardings),
         out_shardings=(state_shardings,
-                       jax.tree.map(lambda _: NamedSharding(mesh, P()), metric_specs)),
+                       compat.tree.map(lambda _: NamedSharding(mesh, P()), metric_specs)),
         donate_argnums=(0,) if donate else ())
     return step_jit, state_shardings, batch_shardings
 
@@ -166,7 +290,7 @@ def make_state_shardings(model: Model, tcfg: TrainConfig, mesh,
     o_kind = effective_kind("pinned_host") if residency.get("optimizer") == "host" else None
 
     def shard(spec_tree, kind):
-        return jax.tree.map(
+        return compat.tree.map(
             lambda s: (NamedSharding(mesh, s, memory_kind=kind) if kind
                        else NamedSharding(mesh, s)), spec_tree,
             is_leaf=lambda x: isinstance(x, P))
@@ -210,7 +334,22 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
     sched = SCHEDULES["warmup_cosine"]
 
     shapes, pspecs = model.abstract_params(mesh)
-    pspec_obj = pack_spec(shapes, pad_to=data_size)
+    # the flat optimizer-state LAYOUT must match init_zero1_state, which
+    # sees neither `plan` nor a builder arg — zero1 overlap resolution is
+    # therefore DDLConfig-driven only (no per-builder override, by design:
+    # a mismatch would silently scramble the packed master weights)
+    overlap = _resolve_overlap(None, None, tcfg, data_size * pod_size)
+    hooks = None
+    if overlap:
+        stacked = _stacked_mask(shapes)
+        sspec = ddl_overlap.shard_spec(shapes, data_size, stacked)
+        hooks = ddl_overlap.make_stack_hooks(
+            _stack_group_specs(pspecs), tcfg.ddl, data_axis="data",
+            pod_axis=pod_axis, data_size=data_size, pod_size=pod_size,
+            keep="shard")
+        pspec_obj = sspec
+    else:
+        pspec_obj = pack_spec(shapes, pad_to=data_size)
     npad = pspec_obj.padded
     beta1, beta2, eps, wd = tcfg.beta1, tcfg.beta2, 1e-8, tcfg.weight_decay
 
@@ -219,18 +358,26 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
     def loss_fn(params, batch):
         with sharding_env(mesh, rules=inner_rules):
             loss, metrics = model.loss(params, batch, policy=policy,
-                                       stream=stream)
+                                       stream=stream, grad_hooks=hooks)
         return loss, metrics
 
     def per_replica(state: Zero1State, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             state.params, batch)
-        flat_g = pack(grads, pspec_obj)                      # [Npad] f32
-        # DDL phases 1-2: my reduced shard
-        shard_g, _ = hierarchical_reduce_scatter_flat(
-            flat_g, data_axis="data", pod_axis=pod_axis,
-            compress_dcn=tcfg.ddl.compress_dcn,
-            mean_over=data_size * pod_size)
+        if overlap:
+            # the in-scan hooks already reduce-scattered the decoder stacks
+            # (zeros outside this rank's slot): slice those, RS the rest
+            shard_g = ddl_overlap.collect_local_shards(
+                grads, sspec, stacked, data_axis="data", pod_axis=pod_axis,
+                mean_over=data_size * pod_size,
+                compress_dcn=tcfg.ddl.compress_dcn)
+        else:
+            flat_g = pack(grads, pspec_obj)                  # [Npad] f32
+            # DDL phases 1-2: my reduced shard
+            shard_g, _ = hierarchical_reduce_scatter_flat(
+                flat_g, data_axis="data", pod_axis=pod_axis,
+                compress_dcn=tcfg.ddl.compress_dcn,
+                mean_over=data_size * pod_size)
         loss = jax.lax.pmean(loss, dpa)
         gn_local = jnp.sum(shard_g.astype(jnp.float32) ** 2)
         gnorm = jnp.sqrt(jax.lax.psum(gn_local, "data"))
@@ -247,14 +394,21 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
         upd = (mu / b1c) / (jnp.sqrt(nu / b2c) + eps) + wd * state.master
         master = state.master - lr * upd
         # DDL phase 3 on *params*: all-gather the updated shard
-        flat_p = jax.lax.all_gather(master, "data", axis=0, tiled=True)
-        new_params = jax.tree.map(
-            lambda old, new: new.astype(old.dtype),
-            state.params, unpack(flat_p, pspec_obj))
+        if overlap:
+            new_f32 = ddl_overlap.allgather_local_shards(master, sspec,
+                                                         data_axis="data")
+            new_params = compat.tree.map(
+                lambda old, new: new.astype(old.dtype),
+                state.params, new_f32)
+        else:
+            flat_p = jax.lax.all_gather(master, "data", axis=0, tiled=True)
+            new_params = compat.tree.map(
+                lambda old, new: new.astype(old.dtype),
+                state.params, unpack(flat_p, pspec_obj))
         out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return Zero1State(step, new_params, mu, nu, master), out_metrics
 
-    replicated = jax.tree.map(lambda _: P(), pspecs)
+    replicated = compat.tree.map(lambda _: P(), pspecs)
     state_manual = Zero1State(P(), replicated, P("data"), P("data"), P("data"))
     _, bshards = model.input_specs(tcfg.shape, mesh)
     batch_manual = bshards
@@ -268,18 +422,18 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
     residency = plan.residency if plan is not None else {}
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
     o_kind = effective_kind("pinned_host") if residency.get("optimizer") == "host" else None
-    params_sh = jax.tree.map(
+    params_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
         else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
     flat_sh = (NamedSharding(mesh, P("data"), memory_kind=o_kind) if o_kind
                else NamedSharding(mesh, P("data")))
     state_sh = Zero1State(NamedSharding(mesh, P()), params_sh,
                           flat_sh, flat_sh, flat_sh)
-    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    batch_sh = compat.tree.map(lambda s: NamedSharding(mesh, s), bshards)
     step_jit = jax.jit(step_sm,
                        in_shardings=(state_sh, batch_sh),
                        out_shardings=(state_sh,
-                                      jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                      compat.tree.map(lambda _: NamedSharding(mesh, P()),
                                                    metric_specs)),
                        donate_argnums=(0,) if donate else ())
     return step_jit, state_sh, batch_sh, pspec_obj
@@ -287,9 +441,20 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
 
 def init_zero1_state(model: Model, tcfg: TrainConfig, rng, data_size: int):
     params = model.init(rng)
-    spec = pack_spec(jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
-                                  params), pad_to=data_size)
-    flat = pack(params, spec)
+    shapes = compat.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                          params)
+    sizes = dict(zip(tcfg.mesh.axes, tcfg.mesh.shape))
+    dp_total = sizes.get("data", data_size) * sizes.get("pod", 1)
+    if _resolve_overlap(None, None, tcfg, dp_total):
+        # shard-major ShardSpec layout matching build_zero1_train_step's
+        # overlapped path; the data extent comes from the config mesh (the
+        # builder's layout is derived from the same mesh, so the two agree)
+        spec = ddl_overlap.shard_spec(shapes, sizes.get("data", data_size),
+                                      _stacked_mask(shapes))
+        flat = ddl_overlap.pack_global(params, spec)
+    else:
+        spec = pack_spec(shapes, pad_to=data_size)
+        flat = pack(params, spec)
     # distinct buffers for mu/nu (donation would reject a shared zeros buffer)
     return Zero1State(jnp.zeros((), jnp.int32), params,
                       jnp.zeros_like(flat), jnp.zeros_like(flat), flat)
@@ -303,15 +468,15 @@ def build_prefill_step(model: Model, shape, mesh, plan=None):
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
-    params_sh = jax.tree.map(
+    params_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
         else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
     _, bshards = model.input_specs(shape, mesh)
     bshards = {k: v for k, v in bshards.items() if k not in ("pos", "labels")}
-    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bshards)
+    batch_sh = compat.tree.map(lambda s: NamedSharding(mesh, s), bshards)
     _, cspecs = model.cache_abstract(shape, mesh)
     k_kind = effective_kind("pinned_host") if residency.get("kvcache") == "host" else None
-    cache_sh = jax.tree.map(
+    cache_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
         else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
 
@@ -332,7 +497,7 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
-    params_sh = jax.tree.map(
+    params_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
         else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
     specs, bshards = model.input_specs(shape, mesh)
@@ -340,7 +505,7 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     pos_sh = NamedSharding(mesh, P())
     _, cspecs = model.cache_abstract(shape, mesh, rules=rules)
     k_kind = effective_kind("pinned_host") if residency.get("kvcache") == "host" else None
-    cache_sh = jax.tree.map(
+    cache_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
         else NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P))
 

@@ -31,7 +31,8 @@ class Trainer:
         self.mesh = make_mesh(tcfg.mesh)
         self.model = Model(tcfg.model, attn_impl=attn_impl)
         self.plan = (plan_memory(tcfg.model, tcfg.shape, tcfg.mesh, tcfg.lms,
-                                 zero1=(tcfg.ddl.mode == "zero1"))
+                                 zero1=(tcfg.ddl.mode == "zero1"),
+                                 microbatches=tcfg.microbatches)
                      if tcfg.lms.enabled else None)
         self.process = process
         self.ckpt = Checkpointer(tcfg.checkpoint_dir,

@@ -1,11 +1,49 @@
 """DDL collective schedules (multi-device via subprocess): hierarchical ==
 flat == arithmetic mean; the compiled HLO contains the paper's RS/AR/AG
-sequence; compressed DCN error stays within the int8 bound; time model."""
+sequence; compressed DCN error stays within the int8 bound; time model;
+pack/unpack and bucketing edge cases."""
+import numpy as np
 import pytest
 
+from repro.core.ddl.allreduce import make_buckets, pack, pack_spec, unpack
 from repro.core.ddl.topology import (ddl_allreduce_time, flat_allreduce_time,
                                      fabrics)
 from tests.util import run_py
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    """Mixed dtypes + scalar leaves + padding survive the flat round trip."""
+    import jax.numpy as jnp
+    tree = {"w": jnp.arange(15.0, dtype=jnp.float32).reshape(5, 3),
+            "b": {"scale": jnp.float32(3.5),                 # scalar leaf
+                  "h": jnp.arange(6.0, dtype=jnp.bfloat16).reshape(2, 3)},
+            "v": jnp.arange(4.0, dtype=jnp.float16)}
+    spec = pack_spec(tree, pad_to=8)
+    assert spec.total == 15 + 1 + 6 + 4
+    assert spec.padded % 8 == 0 and spec.padded >= spec.total
+    flat = pack(tree, spec)
+    assert flat.shape == (spec.padded,) and flat.dtype == jnp.float32
+    out = unpack(flat, spec)
+    for path in (("w",), ("b", "scale"), ("b", "h"), ("v",)):
+        a, b = tree, out
+        for k in path:
+            a, b = a[k], b[k]
+        assert b.dtype == a.dtype and b.shape == a.shape, path
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32))
+
+
+def test_make_buckets_edge_cases():
+    assert make_buckets([], 1024) == []                      # empty tree
+    assert make_buckets([10 ** 9], 1024) == [[0]]            # one giant leaf
+    # giant leaf closes its bucket; trailing small leaves get their own
+    assert make_buckets([10 ** 9, 1, 1], 1024) == [[0], [1, 2]]
+    # coalescing: cumulative size >= cap closes a bucket; remainder kept
+    assert make_buckets([1, 1, 1, 10, 1], 3) == [[0, 1, 2], [3], [4]]
+    # every index appears exactly once, in order
+    sizes = [5, 1, 7, 2, 2, 9]
+    flat = [i for b in make_buckets(sizes, 8) for i in b]
+    assert flat == list(range(len(sizes)))
 
 
 def test_topology_time_model_beats_flat():
