@@ -8,10 +8,12 @@ snapshot (the perf trajectory CI tracks).
   Tab 2 / s3.1 -> bench_accuracy_parity (convergence parity)
   kernels -> bench_kernels         (hot-spot microbenchmarks)
 
-``--smoke`` runs only the fast analytic tables (no jit compiles, no
-subprocess measurements) and writes BENCH_smoke.json — the CI gate. Either
-mode fails (exit 1) if any bench module does not import: a bench that
-silently stops importing would otherwise just vanish from the trajectory.
+``--smoke`` runs the fast analytic tables plus the one small measured row
+the residency-execution gate needs (streamed-optimizer vs resident, a
+smoke-config jit on one device) and writes BENCH_smoke.json — the CI gate.
+Either mode fails (exit 1) if any bench module does not import: a bench
+that silently stops importing would otherwise just vanish from the
+trajectory.
 """
 import argparse
 import json
@@ -61,6 +63,7 @@ def main() -> None:
         modules = [
             ("fig1", b["bench_ddl_allreduce"].run),
             ("fig2b", b["bench_lms_overhead"].run),
+            ("fig2bo", b["bench_lms_overhead"].run_opt_stream_measured),
             ("tab1", b["bench_scaling"].run),
         ]
     else:
@@ -69,6 +72,7 @@ def main() -> None:
             ("fig1m", b["bench_ddl_allreduce"].run_measured),
             ("fig2b", b["bench_lms_overhead"].run),
             ("fig2bm", b["bench_lms_overhead"].run_measured),
+            ("fig2bo", b["bench_lms_overhead"].run_opt_stream_measured),
             ("tab1", b["bench_scaling"].run),
             ("tab1m", b["bench_scaling"].run_measured),
             ("kern", b["bench_kernels"].run),

@@ -71,6 +71,12 @@ def _unflatten(flat: Dict[str, np.ndarray]):
 
 class Checkpointer:
     def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        # keep=N retains the last N committed checkpoints; keep<=0 means
+        # KEEP ALL (never GC). Validated here because a bad value used to
+        # surface only inside _gc — where `steps[:-0]` silently deleted
+        # every checkpoint including the one just written.
+        if not isinstance(keep, int) or isinstance(keep, bool):
+            raise TypeError(f"keep must be an int, got {type(keep).__name__}")
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
@@ -122,6 +128,8 @@ class Checkpointer:
             self._thread = None
 
     def _gc(self):
+        if self.keep <= 0:  # keep-all: steps[:-0] would delete EVERYTHING
+            return
         steps = self.all_steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),

@@ -207,7 +207,8 @@ def reduce_tree_bucketed(ct, cfg: DDLConfig, *, data_axis: str,
 def make_grad_reduce_hook(cfg: DDLConfig, *, data_axis: str = "data",
                           pod_axis: Optional[str] = None, data_size: int = 1,
                           pod_size: int = 1, keep: str = "full",
-                          param_specs=None) -> Callable:
+                          param_specs=None,
+                          sink: Optional[str] = None) -> Callable:
     """Identity-forward wrapper whose backward DDL-reduces the cotangent.
 
     Wrap a layer's param tree inside the scan body (`lp = hook(lp)`): the
@@ -215,6 +216,12 @@ def make_grad_reduce_hook(cfg: DDLConfig, *, data_axis: str = "data",
     gradients exist, overlapping them with the remaining backward compute.
     `param_specs`: per-layer PartitionSpec tree (layer axis dropped) gating
     which leaves may be flattened into buckets.
+    `sink`: optional memory kind (e.g. "pinned_host") the reduced cotangent
+    is emitted to — the gradient host sink of a `residency["grads"]=="host"`
+    plan. Each layer's reduced gradient leaves HBM as soon as it is
+    produced, so only ~prefetch_depth layers of gradients are ever
+    device-resident; the streamed optimizer sweep reads them back layer by
+    layer. None (or an unsupported kind) keeps the cotangent where it is.
     """
     assert keep in ("full", "shard"), keep
 
@@ -226,10 +233,11 @@ def make_grad_reduce_hook(cfg: DDLConfig, *, data_axis: str = "data",
         return tree, None
 
     def bwd(_, ct):
-        return (reduce_tree_bucketed(
+        red = reduce_tree_bucketed(
             ct, cfg, data_axis=data_axis, pod_axis=pod_axis,
             data_size=data_size, pod_size=pod_size, keep=keep,
-            param_specs=param_specs),)
+            param_specs=param_specs)
+        return (compat.to_memory_kind(red, sink),)
 
     hook.defvjp(fwd, bwd)
     return hook
@@ -238,13 +246,15 @@ def make_grad_reduce_hook(cfg: DDLConfig, *, data_axis: str = "data",
 def make_stack_hooks(stack_specs: Dict[str, object], cfg: DDLConfig, *,
                      data_axis: str = "data", pod_axis: Optional[str] = None,
                      data_size: int = 1, pod_size: int = 1,
-                     keep: str = "full") -> Dict[str, Callable]:
+                     keep: str = "full",
+                     sink: Optional[str] = None) -> Dict[str, Callable]:
     """One hook per decoder scan group (the per-group param structures —
-    and so the custom_vjp signatures — differ)."""
+    and so the custom_vjp signatures — differ). `sink`: memory kind for the
+    gradient host sink (see `make_grad_reduce_hook`)."""
     return {name: make_grad_reduce_hook(
                 cfg, data_axis=data_axis, pod_axis=pod_axis,
                 data_size=data_size, pod_size=pod_size, keep=keep,
-                param_specs=spec)
+                param_specs=spec, sink=sink)
             for name, spec in stack_specs.items()}
 
 

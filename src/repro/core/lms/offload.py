@@ -55,3 +55,11 @@ def stream_layer_to_device(layer_params):
     Identity where the platform has one memory space, so the streamed graph
     stays numerically byte-identical to the resident graph."""
     return compat.to_memory_kind(layer_params, effective_kind(DEVICE))
+
+
+def stream_layer_to_host(layer_tree):
+    """Swap-OUT counterpart of `stream_layer_to_device`: place one layer's
+    tensor tree back in pinned host memory inside a scan body (the streamed
+    optimizer sweep's write-back, the backward hooks' gradient sink).
+    Identity on single-memory-space platforms, like the swap-in."""
+    return compat.to_memory_kind(layer_tree, effective_kind(HOST))

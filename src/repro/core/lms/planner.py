@@ -13,6 +13,7 @@ when the swap is overlappable with a layer's compute
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -28,24 +29,52 @@ class TensorClass:
     per_layer: bool = True
 
 
+# Every residency class an executor stream exists for. Order is the
+# canonical order of SwapSchedule.stream.
+STREAM_CLASSES = ("params", "kvcache", "optimizer", "grads")
+
+# The streamed optimizer sweep updates large UNSCANNED remainder leaves
+# (embeddings, LM head) in this many flattened-view chunks (largest
+# power-of-2 factor of the leaf's element count up to it — vocab*d_model is
+# essentially always 16-divisible even when the vocab is odd), streamed
+# in/out per chunk — bounding the remainder's optimizer working set to ~2
+# chunks of state the same way the layer sweep bounds the decoder stacks to
+# ~2 layers. Shared with the executor (train/steps.py imports it) so
+# pricing and execution cannot drift.
+OPT_REST_CHUNKS = 16
+
+
 @dataclass(frozen=True)
 class SwapSchedule:
     """The planner→executor contract for host-resident tensor classes (see
-    DESIGN.md §3): WHICH classes stream per layer, HOW far ahead the executor
-    prefetches, and the layer visitation order of each sweep. The executor
-    (`models/transformer.py` streamed scans) follows this; the planner's
+    DESIGN.md §3/§6): WHICH classes stream per layer, HOW far ahead the
+    executor prefetches, and the layer visitation order of each sweep. The
+    executor (`models/transformer.py` streamed scans; the streamed optimizer
+    sweep in `train/steps.py`) follows this; the planner's
     `swap_bytes_per_step` accounting assumes exactly one swap-in per layer
-    per sweep listed here.
+    per sweep listed here, itemised per class in `swap_bytes`.
+
+    Stream classes beyond params/kvcache:
+
+    * ``"optimizer"`` — the monolithic opt_update is replaced by a
+      `lax.scan` over the stacked decoder layer axis that swaps one layer's
+      optimizer-state slice into HBM, updates it, and swaps it back
+      (double-buffered at `prefetch_depth`); the unscanned remainder
+      (embeddings, norms) updates resident.
+    * ``"grads"`` — the overlapped-backward hooks sink each layer's reduced
+      cotangent to host as it is produced; the streamed optimizer sweep
+      reads them back layer by layer.
 
     The current executors implement exactly the canonical orders
     make_swap_schedule emits — fwd `range(L)` via the scan, bwd
-    `reversed(range(L))` via remat of the scan body — so `fwd_order` /
-    `bwd_order` DESCRIBE the executed sweeps (and whether a bwd sweep exists
-    at all); arbitrary permutations are not supported and would be silently
-    ignored. A plan wanting a different visitation order needs executor
-    work, not just different tuples here."""
+    `reversed(range(L))` via remat of the scan body, the optimizer sweep
+    `range(L)` after the backward — so `fwd_order` / `bwd_order` DESCRIBE
+    the executed sweeps (and whether a bwd sweep exists at all); arbitrary
+    permutations are not supported and would be silently ignored. A plan
+    wanting a different visitation order needs executor work, not just
+    different tuples here."""
     prefetch_depth: int = 2             # layers in flight (2 = double buffer)
-    stream: Tuple[str, ...] = ()        # subset of {"params", "kvcache"}
+    stream: Tuple[str, ...] = ()        # subset of STREAM_CLASSES
     fwd_order: Tuple[int, ...] = ()     # layer indices, forward sweep
     bwd_order: Tuple[int, ...] = ()     # backward sweep ((), for inference)
     # DDL reduction issued per layer inside the bwd sweep (the reduced grad
@@ -55,6 +84,13 @@ class SwapSchedule:
     # the authoritative field the step builders resolve against (reduction
     # overlap applies whether or not anything streams).
     overlap_grads: bool = True
+    # priced host<->device bytes per step, itemised per host-resident class
+    # — placement-only classes included, so the pairs reconcile with
+    # MemoryPlan.swap_bytes_per_step ((class, bytes); both directions
+    # summed). Caveat: a plan whose ONLY host class is placement-only has
+    # no schedule at all (None iff nothing streams), so its traffic is
+    # reported solely through MemoryPlan.swap_bytes_per_step.
+    swap_bytes: Tuple[Tuple[str, int], ...] = ()
 
     @property
     def streams_params(self) -> bool:
@@ -63,6 +99,18 @@ class SwapSchedule:
     @property
     def streams_kvcache(self) -> bool:
         return "kvcache" in self.stream
+
+    @property
+    def streams_optimizer(self) -> bool:
+        return "optimizer" in self.stream
+
+    @property
+    def streams_grads(self) -> bool:
+        return "grads" in self.stream
+
+    def bytes_for(self, cls: str) -> int:
+        """Priced swap traffic of one host-resident class (0 if unpriced)."""
+        return dict(self.swap_bytes).get(cls, 0)
 
     @property
     def sweeps_per_step(self) -> int:
@@ -83,6 +131,11 @@ class MemoryPlan:
     # priced recommendation for train plans (None for inference / dp==1):
     # True iff per-layer in-scan reduction beats the post-hoc pass
     overlap_grads: Optional[bool] = None
+    # residency classes executed by PLACEMENT alone (no per-layer stream),
+    # by documented design — e.g. zero1's flat 1/|data| optimizer shard.
+    # Every other host-resident class MUST appear in swap_schedule.stream
+    # (check_schedule_invariant enforces this at plan time).
+    placement_only: Tuple[str, ...] = ()
 
     def summary(self) -> str:
         gb = 1024 ** 3
@@ -96,6 +149,8 @@ class MemoryPlan:
             s = self.swap_schedule
             lines.append(f"  swap schedule: stream={list(s.stream)} "
                          f"prefetch={s.prefetch_depth} sweeps={s.sweeps_per_step}")
+        if self.placement_only:
+            lines.append(f"  placement-only: {list(self.placement_only)}")
         if self.overlap_grads is not None:
             lines.append(f"  grad reduction: "
                          f"{'overlapped' if self.overlap_grads else 'serialized'}")
@@ -109,19 +164,51 @@ def _axis_size(mesh: MeshSpec, name: str) -> int:
 
 def make_swap_schedule(residency: Dict[str, str], num_layers: int,
                        kind: str, prefetch_depth: int = 2,
-                       overlap_grads: bool = True) -> Optional[SwapSchedule]:
+                       overlap_grads: bool = True,
+                       swap_bytes: Optional[Dict[str, int]] = None,
+                       placement_only: Tuple[str, ...] = ()
+                       ) -> Optional[SwapSchedule]:
     """Derive the executor schedule from a residency map: every host-resident
-    streamable class streams once per sweep; training plans sweep fwd then
-    bwd (the remat of the layer body re-issues the swap-ins in reverse),
-    inference plans sweep fwd only. None when nothing streams."""
-    stream = tuple(k for k in ("params", "kvcache") if residency.get(k) == "host")
+    streamable class streams once per sweep (params/kvcache inside the layer
+    scans; optimizer/grads via the streamed optimizer sweep and the backward
+    hooks' host sink); training plans sweep fwd then bwd (the remat of the
+    layer body re-issues the swap-ins in reverse), inference plans sweep fwd
+    only. Classes in `placement_only` are executed by placement alone and
+    deliberately kept out of the stream list. None when nothing streams."""
+    stream = tuple(k for k in STREAM_CLASSES
+                   if residency.get(k) == "host" and k not in placement_only)
     if not stream:
         return None
     fwd = tuple(range(num_layers))
     bwd = tuple(reversed(fwd)) if kind == "train" else ()
+    # itemise EVERY priced class, placement-only included, so the breakdown
+    # reconciles with MemoryPlan.swap_bytes_per_step
+    sb = tuple(sorted((k, int(v)) for k, v in (swap_bytes or {}).items()))
     return SwapSchedule(prefetch_depth=prefetch_depth, stream=stream,
                         fwd_order=fwd, bwd_order=bwd,
-                        overlap_grads=overlap_grads and kind == "train")
+                        overlap_grads=overlap_grads and kind == "train",
+                        swap_bytes=sb)
+
+
+def check_schedule_invariant(residency: Dict[str, str],
+                             schedule: Optional[SwapSchedule],
+                             placement_only: Tuple[str, ...] = ()) -> None:
+    """Planner invariant (DESIGN.md §6): every residency class priced into
+    `host_bytes` must either appear in `SwapSchedule.stream` (an executor
+    stream exists and will run) or be declared placement-only by documented
+    design. A plan that promises host residency the executor never delivers
+    would report peak/fits numbers that are fiction — fail at plan time, not
+    at OOM time."""
+    streams = set(schedule.stream) if schedule is not None else set()
+    missing = sorted(c for c, r in residency.items()
+                     if r == "host" and c not in streams
+                     and c not in placement_only)
+    if missing:
+        raise AssertionError(
+            f"MemoryPlan promises host residency for {missing} but no "
+            f"executor stream exists (SwapSchedule.stream={sorted(streams)}, "
+            f"placement_only={sorted(placement_only)}); the plan's peak/fits "
+            "accounting would never be delivered at runtime")
 
 
 def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
@@ -286,6 +373,7 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     lflops = layer_flops_dev(cfg, shape, mesh)
     layer_time = lflops / hw.peak_flops_bf16
     swap_per_step = 0
+    class_swap: Dict[str, int] = {}   # per-class priced bytes for the schedule
 
     if shape.kind in ("prefill", "decode"):
         # inference: no grads/optimizer; activations are transient.
@@ -304,20 +392,25 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
             # stream params per layer: keep 2 layers resident
             resident = 2 * params_dev // max(L, 1)
             host += params_dev
-            swap_per_step += params_dev  # one full sweep per token/prefill
+            class_swap["params"] = params_dev  # one full sweep per token/prefill
+            swap_per_step += class_swap["params"]
             peak = resident + kv + transient
             residency["params"] = "host"
             notes.append("params host-resident, streamed per layer")
         if peak > budget:
             # offload KV cache, keep the working window
             host += kv
-            swap_per_step += 2 * kv // max(L, 1)
+            class_swap["kvcache"] = 2 * kv // max(L, 1)
+            swap_per_step += class_swap["kvcache"]
             peak = peak - kv + kv // max(L, 1)
             residency["kvcache"] = "host"
             notes.append("KV cache host-resident, streamed per layer")
+        schedule = make_swap_schedule(residency, L, shape.kind,
+                                      swap_bytes=class_swap)
+        check_schedule_invariant(residency, schedule)
         return MemoryPlan({}, residency, int(peak), int(host),
                           int(swap_per_step), budget, peak <= budget, notes,
-                          swap_schedule=make_swap_schedule(residency, L, shape.kind))
+                          swap_schedule=schedule)
 
     # ---- training -----------------------------------------------------------
     acts = activation_classes(cfg, shape, mesh)
@@ -332,29 +425,99 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     def fixed():
         return params_dev + grads_dev + opt_dev + transient
 
+    # price the reduction-overlap decision FIRST: whether the backward runs
+    # the per-layer in-scan reduction decides whether a per-layer gradient
+    # host sink can exist at all, which gates the grads residency below
+    overlap_grads: Optional[bool] = None
+    if dp * _axis_size(mesh, "pod") > 1:
+        t_ser, t_ovl = price_grad_reduction(cfg, shape, mesh, hw,
+                                            microbatches=microbatches)
+        overlap_grads = t_ovl <= t_ser
+        notes.append(f"grad reduction priced: overlapped {t_ovl*1e3:.2f}ms vs "
+                     f"serialized {t_ser*1e3:.2f}ms "
+                     f"(microbatches={max(microbatches, 1)}) -> "
+                     f"{'overlap' if overlap_grads else 'serialize'}")
+
     host = 0
     if lms.enabled:
         # 1) optimizer to host if params+opt alone crowd the budget
         if lms.offload_optimizer != "never" and \
                 fixed() + saved_bytes() > budget and opt_dev > budget // 4:
-            host += opt_dev
-            swap_per_step += 2 * (4 * n_params // tp // (dp if zero1 else 1))
-            opt_dev = 0
+            opt_host = opt_dev
+            host += opt_host
+            # the streamed optimizer sweep swaps the FULL state (mu+nu+master
+            # for adamw, momentum for sgdm) in AND back out once per step;
+            # zero1's flat shard moves wholesale (placement-only) at the same
+            # per-device volume, already divided by |data|
+            class_swap["optimizer"] = 2 * opt_host
+            swap_per_step += class_swap["optimizer"]
+            if zero1:
+                # flat 1/|data| shard, transferred whole around its update
+                opt_dev = 0
+                notes.append("optimizer shard host-resident (zero1: flat "
+                             "1/|data| state, placement-only transfer)")
+            else:
+                # resident during the sweep: 2 double-buffered layer slices
+                # PLUS the unscanned remainder (embeddings, lm head, norms,
+                # encoder), whose large leaves update in OPT_REST_CHUNKS
+                # streamed flat chunks (2 in flight). Priced with the SAME
+                # gcd/cutoff rule the executor's _rest_chunks applies —
+                # norms one-shot (their leaves are tiny and below the 1M
+                # cutoff), big components at 2 chunks — so a leaf the
+                # executor cannot chunk is charged at its full state
+                rest_dev = 0
+                for name, n in cfg.param_breakdown():
+                    if name not in ("embed", "lm_head", "norms", "encoder"):
+                        continue
+                    c = (math.gcd(n, OPT_REST_CHUNKS)
+                         if name != "norms" and n >= (1 << 20) else 1)
+                    rest_dev += opt_mult * ((2 * n // c) if c > 1 else n) // tp
+                opt_dev = 2 * opt_host // max(L, 1) + rest_dev
+                notes.append("optimizer state host-resident, streamed per "
+                             "layer (ZeRO-Offload style sweep)")
             residency["optimizer"] = "host"
-            notes.append("optimizer state host-resident (ZeRO-Offload style)")
         # 2) params to host (streamed per layer) when params alone ~exceed budget
         if lms.offload_params != "never" and params_dev + grads_dev > budget // 2:
             resident = 4 * params_dev // max(L, 1)   # 2 layers fwd + bwd prefetch
             host += params_dev
-            swap_per_step += 2 * params_dev          # fwd sweep + bwd sweep
+            class_swap["params"] = 2 * params_dev    # fwd sweep + bwd sweep
+            swap_per_step += class_swap["params"]
             params_dev_eff = resident
             residency["params"] = "host"
             notes.append("params host-resident, streamed per layer (LMS swap)")
-            grads_host = grads_dev
-            host += grads_host
-            swap_per_step += grads_dev               # grads stream out in bwd
-            grads_dev_eff = 2 * grads_dev // max(L, 1)
-            residency["grads"] = "host"
+            if zero1:
+                # zero1 never materialises the grad tree past the backward:
+                # the in-scan hooks keep reduce-scattered f32 shards
+                # (1/|data|) plus ~2 layers of transient cotangents — no
+                # host residency, no swap traffic to price
+                grads_dev_eff = (2 * grads_dev // max(L, 1)
+                                 + 4 * n_params // tp // max(dp, 1))
+                notes.append("zero1 grads kept as in-step reduce-scattered "
+                             "shards (no host sink)")
+            elif max(microbatches, 1) == 1 and bool(overlap_grads) \
+                    and residency.get("optimizer") == "host":
+                # the per-layer host sink only exists when the overlapped
+                # backward emits one reduced cotangent per layer (single
+                # batch, keep="full") AND the streamed optimizer sweep is
+                # there to consume it layer by layer — promising it in any
+                # other configuration would be the fits=True fiction the
+                # schedule invariant exists to prevent
+                grads_host = grads_dev
+                host += grads_host
+                # bwd-sweep stream-out + the optimizer sweep's read-back
+                class_swap["grads"] = 2 * grads_dev
+                swap_per_step += class_swap["grads"]
+                grads_dev_eff = 2 * grads_dev // max(L, 1)
+                residency["grads"] = "host"
+            else:
+                # no executable sink: grads stay device at their honest
+                # footprint — the f32 microbatch accumulator / all-gathered
+                # mean tree for accumulation, the bf16 tree otherwise
+                grads_dev_eff = (2 * grads_dev if max(microbatches, 1) > 1
+                                 else grads_dev)
+                notes.append("grads stay device (per-layer host sink needs "
+                             "overlapped backward, microbatches=1, and the "
+                             "streamed optimizer sweep)")
         else:
             params_dev_eff, grads_dev_eff = params_dev, grads_dev
 
@@ -395,22 +558,23 @@ def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         peak = fixed() + saved_bytes()
         params_dev_eff = params_dev
 
-    overlap_grads: Optional[bool] = None
-    if shape.kind == "train" and dp * _axis_size(mesh, "pod") > 1:
-        t_ser, t_ovl = price_grad_reduction(cfg, shape, mesh, hw,
-                                            microbatches=microbatches)
-        overlap_grads = t_ovl <= t_ser
-        notes.append(f"grad reduction priced: overlapped {t_ovl*1e3:.2f}ms vs "
-                     f"serialized {t_ser*1e3:.2f}ms "
-                     f"(microbatches={max(microbatches, 1)}) -> "
-                     f"{'overlap' if overlap_grads else 'serialize'}")
-
+    # zero1 executes optimizer-host residency as a flat P("data")-sharded
+    # placement (the 1/|data| shard moves wholesale around its update) —
+    # placement-only by design, see DESIGN.md §6. Everything else
+    # host-resident must stream.
+    placement_only = (("optimizer",)
+                      if zero1 and residency.get("optimizer") == "host"
+                      else ())
+    schedule = make_swap_schedule(residency, L, shape.kind,
+                                  overlap_grads=bool(overlap_grads),
+                                  swap_bytes=class_swap,
+                                  placement_only=placement_only)
+    check_schedule_invariant(residency, schedule, placement_only)
     return MemoryPlan(assignment, residency, int(peak), int(host),
                       int(swap_per_step), budget, peak <= budget, notes,
-                      swap_schedule=make_swap_schedule(
-                          residency, L, shape.kind,
-                          overlap_grads=bool(overlap_grads)),
-                      overlap_grads=overlap_grads)
+                      swap_schedule=schedule,
+                      overlap_grads=overlap_grads,
+                      placement_only=placement_only)
 
 
 def hbm_traffic_model(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,

@@ -185,7 +185,10 @@ def _scan_streamed(cfg, stack, carry, ctx, pattern, n_iter, *, policy,
     backward, core/ddl/overlap.py) applied per layer AFTER the swap-in, so in
     the backward sweep the cotangent is DDL-reduced on device first and only
     then hits the swap-in's transpose (the device→host grad stream-out):
-    grads stream out reduced as the next layer's params stream in.
+    grads stream out reduced as the next layer's params stream in. On
+    grads-host plans the hook itself sinks the reduced cotangent to pinned
+    host (the gradient host sink), so the bwd sweep keeps only
+    ~prefetch_depth layers of gradients device-resident.
     """
     d = _stream_depth(stream, n_iter)
     grouped = compat.tree.map(

@@ -38,6 +38,28 @@ def adamw_init(params) -> AdamState:
     )
 
 
+def clip_leaf(g, scale):
+    """One leaf of `clip_by_global_norm`, exposed so the streamed optimizer
+    sweep (train/steps.py) clips layer slices with bit-identical math."""
+    return (g.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def adamw_slice_update(g, m, v, mp, *, lr, beta1, beta2, b1c, b2c, eps=1e-8,
+                       weight_decay=0.1):
+    """The AdamW update on ONE array (a whole leaf or a per-layer slice of a
+    stacked leaf) -> (m2, v2, master2). Shared by the resident `adamw_update`
+    and the streamed per-layer optimizer sweep so both paths are numerically
+    byte-identical (elementwise math is slicing-invariant). `b1c`/`b2c` are
+    the step's bias corrections, computed once by the caller."""
+    gf = g.astype(jnp.float32)
+    m2 = beta1 * m + (1 - beta1) * gf
+    v2 = beta2 * v + (1 - beta2) * gf * gf
+    mhat = m2 / b1c
+    vhat = v2 / b2c
+    mp2 = mp - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * mp)
+    return m2, v2, mp2
+
+
 def adamw_update(grads, state: AdamState, params, *, lr, beta1=0.9, beta2=0.95,
                  eps=1e-8, weight_decay=0.1):
     step = state.step + 1
@@ -45,13 +67,9 @@ def adamw_update(grads, state: AdamState, params, *, lr, beta1=0.9, beta2=0.95,
     b2c = 1.0 - beta2 ** step.astype(jnp.float32)
 
     def upd(g, m, v, mp):
-        gf = g.astype(jnp.float32)
-        m2 = beta1 * m + (1 - beta1) * gf
-        v2 = beta2 * v + (1 - beta2) * gf * gf
-        mhat = m2 / b1c
-        vhat = v2 / b2c
-        mp2 = mp - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * mp)
-        return m2, v2, mp2
+        return adamw_slice_update(g, m, v, mp, lr=lr, beta1=beta1, beta2=beta2,
+                                  b1c=b1c, b2c=b2c, eps=eps,
+                                  weight_decay=weight_decay)
 
     flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
     mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
@@ -66,14 +84,22 @@ def sgdm_init(params) -> SGDState:
                     momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
 
 
+def sgdm_slice_update(g, m, p, *, lr, beta1, weight_decay=0.0):
+    """Momentum-SGD update on ONE array -> (momentum2, params2). Shared by
+    the resident `sgdm_update` and the streamed per-layer optimizer sweep
+    (same byte-identity contract as `adamw_slice_update`)."""
+    gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+    m2 = beta1 * m + gf
+    return m2, (p.astype(jnp.float32) - lr * m2).astype(p.dtype)
+
+
 def sgdm_update(grads, state: SGDState, params, *, lr, beta1=0.9,
                 weight_decay=0.0, **_):
     step = state.step + 1
 
     def upd(g, m, p):
-        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-        m2 = beta1 * m + gf
-        return m2, (p.astype(jnp.float32) - lr * m2).astype(p.dtype)
+        return sgdm_slice_update(g, m, p, lr=lr, beta1=beta1,
+                                 weight_decay=weight_decay)
 
     flat = jax.tree.map(upd, grads, state.momentum, params)
     mom = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
@@ -86,11 +112,17 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sum(leaves))
 
 
+def clip_scale(gnorm, max_norm):
+    """The clip factor of `clip_by_global_norm` — one definition shared with
+    the streamed optimizer sweep and the zero1 step, so the exact-parity
+    contract cannot drift when the clip formula changes."""
+    return jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+
+
 def clip_by_global_norm(grads, max_norm: float):
     gn = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
-                        grads), gn
+    scale = clip_scale(gn, max_norm)
+    return jax.tree.map(lambda g: clip_leaf(g, scale), grads), gn
 
 
 OPTIMIZERS = {

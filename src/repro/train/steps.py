@@ -22,14 +22,24 @@ zero1 optimizer state lives in the matching shard-major `ShardSpec` layout.
 `DDLConfig.overlap_grads` > `MemoryPlan.overlap_grads` (the planner's
 priced recommendation) > overlap; forced off when the DP extent is 1 or
 `ddl.mode == "none"`.
+
+Host residency is EXECUTED for every class the plan's SwapSchedule streams
+(DESIGN.md §6): params/kvcache in the decoder scans (PR 1), the optimizer
+state via the streamed per-layer sweep (`_streamed_opt_update` — swap a
+layer's (mu, nu, master) slice in, update with the shared per-slice kernel,
+swap it back), and gradients via the overlapped-backward hooks' host sink
+(each layer's reduced cotangent leaves HBM as it is produced; the optimizer
+sweep reads it back layer by layer).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import jax.tree_util as jtu
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -39,12 +49,17 @@ from repro.core.ddl.allreduce import (ddl_reduce_tree,
                                       hierarchical_reduce_scatter_flat,
                                       pack, pack_spec, unpack, PackSpec)
 from repro.core.ddl import overlap as ddl_overlap
-from repro.core.lms.planner import MemoryPlan, plan_memory, plan_to_policy
-from repro.core.lms.offload import effective_kind
+from repro.core.lms.planner import (MemoryPlan, OPT_REST_CHUNKS, plan_memory,
+                                    plan_to_policy)
+from repro.core.lms.offload import (effective_kind, stream_layer_to_device,
+                                    stream_layer_to_host)
 from repro.launch.mesh import dp_axes, mesh_axis_sizes
 from repro.models.model import Model
 from repro.models.sharding import sharding_env, rules_without, spec as mkspec
-from repro.optim.adamw import OPTIMIZERS, clip_by_global_norm
+from repro.optim.adamw import (OPTIMIZERS, AdamState, SGDState,
+                               adamw_slice_update, clip_by_global_norm,
+                               clip_leaf, clip_scale, global_norm,
+                               sgdm_slice_update)
 from repro.optim.schedule import SCHEDULES
 
 
@@ -67,6 +82,15 @@ def _serving_stream(plan: Optional[MemoryPlan]):
     """SwapSchedule for the serving scans, which can stream params AND the
     KV cache (the decode scan threads both per layer)."""
     return plan.swap_schedule if plan is not None else None
+
+
+def _opt_stream(plan: Optional[MemoryPlan]):
+    """The plan's SwapSchedule iff it streams the optimizer class — the
+    switch that replaces the monolithic opt_update with the per-layer
+    streamed optimizer sweep (`_streamed_opt_update`)."""
+    if plan is None or plan.swap_schedule is None:
+        return None
+    return plan.swap_schedule if plan.swap_schedule.streams_optimizer else None
 
 
 # ---------------------------------------------------------------------------
@@ -127,15 +151,190 @@ def _merge_stack_grads(rest, stacks):
 
 
 # ---------------------------------------------------------------------------
+# Streamed optimizer sweep (residency["optimizer"] == "host", executed)
+# ---------------------------------------------------------------------------
+
+def _map_kernel(kernel, nout: int, *trees):
+    """tree.map a multi-output elementwise kernel, unzipping the tuple
+    results into `nout` separate trees (the adamw_update extraction idiom)."""
+    flat = compat.tree.map(kernel, *trees)
+    is_tup = lambda x: isinstance(x, tuple)
+    return tuple(compat.tree.map(lambda t, _i=i: t[_i], flat, is_leaf=is_tup)
+                 for i in range(nout))
+
+
+def _streamed_opt_update(optimizer: str, grads, opt_state, params, *, cfg,
+                         lr, beta1, beta2, weight_decay, clip_scale,
+                         schedule, params_host: bool):
+    """Execute the optimizer update as a per-layer streamed sweep.
+
+    When the plan's residency places the optimizer state on host, the
+    monolithic `opt_update` would pull the FULL fp32 (mu, nu, master) tree
+    into HBM — O(params) — exactly what the plan's peak claims not to
+    happen. Instead, a `lax.scan` over each decoder stack group's layer
+    axis swaps one `prefetch_depth`-layer slice of the state (and the
+    layer's gradient, which may itself be host-resident) into HBM, applies
+    the shared per-slice update kernel (`optim/adamw.py`), and swaps the
+    result straight back — double-buffered like the PR-1 param stream, so
+    the copy of slice i+1 overlaps the update of slice i and the optimizer
+    HBM working set is O(params/L). The unscanned remainder (embeddings,
+    norms, unrolled tail layers, encoder) updates resident in one shot.
+
+    Numerics: the kernels are the SAME elementwise expressions the resident
+    path maps over whole leaves (clip included, via `clip_leaf`), and
+    elementwise math is slicing-invariant, so streamed == resident
+    byte-for-byte; the swap placements are identity on single-memory-space
+    platforms. -> (new_params, new_opt_state)."""
+    from repro.models.transformer import stack_plan, _stream_depth
+
+    step = opt_state.step + 1
+    if optimizer == "adamw":
+        b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+        b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+        def kernel(g, m, v, mp):
+            return adamw_slice_update(g, m, v, mp, lr=lr, beta1=beta1,
+                                      beta2=beta2, b1c=b1c, b2c=b2c,
+                                      weight_decay=weight_decay)
+
+        state_trees = (opt_state.mu, opt_state.nu, opt_state.master)
+        needs_params = False
+    elif optimizer == "sgdm":
+        def kernel(g, m, p):
+            return sgdm_slice_update(g, m, p, lr=lr, beta1=beta1,
+                                     weight_decay=weight_decay)
+
+        state_trees = (opt_state.momentum,)
+        needs_params = True
+    else:
+        raise ValueError(f"no streamed sweep for optimizer {optimizer!r}")
+    nstate = len(state_trees)
+
+    g_stacks, g_rest = _split_stack_grads(grads)
+    p_stacks, p_rest = _split_stack_grads(params)
+    s_splits = [_split_stack_grads(t) for t in state_trees]
+    s_stacks, s_rests = [s[0] for s in s_splits], [s[1] for s in s_splits]
+
+    new_p_stacks: Dict[str, Any] = {}
+    new_s_stacks: list = [{} for _ in range(nstate)]
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] != "scan":
+            continue
+        name = f"stack{gi}"
+        n_iter = entry[2]
+        d = _stream_depth(schedule, n_iter)
+        group = lambda t: compat.tree.map(
+            lambda x: x.reshape((n_iter // d, d) + x.shape[1:]), t)
+        # static dtypes for the master -> param cast (no data dependency)
+        dts = compat.tree.map(lambda p: p.dtype, p_stacks[name])
+
+        def body(_, xs, _dts=dts):
+            g_l, s_l, p_l = xs
+            # swap-ins first (state slice i+1's copy overlaps update i);
+            # identity for classes already device-resident
+            s_l = stream_layer_to_device(s_l)
+            g_l = stream_layer_to_device(g_l)
+            g_l = compat.tree.map(lambda g: clip_leaf(g, clip_scale), g_l)
+            if needs_params:
+                p_l = stream_layer_to_device(p_l)
+                m2, p2 = _map_kernel(kernel, 2, g_l, s_l[0], p_l)
+                out_state = (m2,)
+            else:
+                m2, v2, mp2 = _map_kernel(kernel, 3, g_l, s_l[0], s_l[1],
+                                          s_l[2])
+                p2 = compat.tree.map(lambda mp, dt: mp.astype(dt), mp2, _dts)
+                out_state = (m2, v2, mp2)
+            # swap the updated slice straight back out
+            out_state = stream_layer_to_host(out_state)
+            if params_host:
+                p2 = stream_layer_to_host(p2)
+            return (), (out_state, p2)
+
+        xs = (group(g_stacks[name]),
+              tuple(group(s[name]) for s in s_stacks),
+              group(p_stacks[name]) if needs_params else None)
+        _, (ys_state, ys_p) = jax.lax.scan(body, (), xs)
+        ungroup = lambda t: compat.tree.map(
+            lambda x: x.reshape((n_iter,) + x.shape[2:]), t)
+        for i in range(nstate):
+            new_s_stacks[i][name] = ungroup(ys_state[i])
+        new_p_stacks[name] = ungroup(ys_p)
+
+    # unscanned remainder (embeddings, norms, rem layers, encoder): no layer
+    # axis, but its LARGE leaves (embedding / lm-head state is GB-scale on
+    # production vocabs) update in OPT_REST_CHUNKS flattened-view chunks,
+    # streamed in/out per chunk, so the remainder working set is ~2 chunks
+    # of state, not the whole fp32 embedding state; small leaves go in one
+    # shot (a scan per norm vector would only bloat compile time). Chunking
+    # the flat view (not the leading axis) keeps odd vocab sizes chunkable:
+    # vocab*d_model is essentially always 16-divisible.
+    def _rest_chunks(n: int) -> int:
+        if n < (1 << 20):
+            return 1
+        return math.gcd(n, OPT_REST_CHUNKS)
+
+    def rest_leaf(g, *rest_leaves):
+        """One remainder leaf set -> tuple of updated leaves
+        ((state..., new_param) layout matching the stack sweep)."""
+        p_like = rest_leaves[-1]          # param leaf (dtype; sgdm: value)
+        ss = rest_leaves[:-1]
+        pdt = p_like.dtype                # static, no data dependency
+
+        def one_shot(g1, ss1, p1):
+            ss1 = stream_layer_to_device(ss1)
+            g1 = clip_leaf(stream_layer_to_device(g1), clip_scale)
+            if needs_params:
+                m2, p2 = kernel(g1, ss1[0], stream_layer_to_device(p1))
+                return stream_layer_to_host((m2,)) + (p2,)
+            m2, v2, mp2 = kernel(g1, ss1[0], ss1[1], ss1[2])
+            return stream_layer_to_host((m2, v2, mp2)) + (mp2.astype(pdt),)
+
+        n = g.size
+        c = _rest_chunks(n)
+        if c <= 1:
+            return one_shot(g, ss, p_like)
+        resh = lambda x: x.reshape((c, n // c))
+
+        def cbody(_, xs):
+            gc, ssc, pc = xs
+            return (), one_shot(gc, ssc, pc)
+
+        _, ys = jax.lax.scan(
+            cbody, (), (resh(g), tuple(resh(s) for s in ss),
+                        resh(p_like) if needs_params else None))
+        return tuple(y.reshape(g.shape) for y in ys)
+
+    rest_in = ((g_rest,) + tuple(s_rests) + (p_rest,))
+    outs = _map_kernel(rest_leaf, nstate + 1, *rest_in)
+    new_s_rests, p2r = tuple(outs[:nstate]), outs[nstate]
+
+    new_params = _merge_stack_grads(p2r, new_p_stacks)
+    new_states = [_merge_stack_grads(r, s)
+                  for r, s in zip(new_s_rests, new_s_stacks)]
+    if optimizer == "adamw":
+        return new_params, AdamState(step, *new_states)
+    return new_params, SGDState(step, *new_states)
+
+
+# ---------------------------------------------------------------------------
 # Paper-faithful mode: DDL all-reduce, replicated optimizer
 # ---------------------------------------------------------------------------
 
 def _microbatch_split(batch, m: int):
-    """[B, ...] -> [m, B/m, ...] (broadcast leaves that don't split)."""
-    return compat.tree.map(
-        lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:])
-        if x.ndim >= 1 and x.shape[0] % m == 0 else
-        jnp.broadcast_to(x, (m,) + x.shape), batch)
+    """[B, ...] -> [m, B/m, ...]. Only 0-d (scalar) leaves broadcast; any
+    array leaf whose leading dim `m` does not divide is an error — the old
+    silent `broadcast_to` fallback DUPLICATED the whole batch m times and
+    trained every microbatch on the same tokens."""
+    def split(path, x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (m,) + x.shape)
+        if x.shape[0] % m == 0:
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        raise ValueError(
+            f"microbatches={m} does not divide the leading dim of batch "
+            f"leaf {jtu.keystr(path)!r} with shape {x.shape}; only 0-d "
+            "leaves broadcast")
+    return jtu.tree_map_with_path(split, batch)
 
 
 def build_train_step(model: Model, tcfg: TrainConfig, mesh,
@@ -151,6 +350,10 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     pod_axis = "pod" if "pod" in sizes and pod_size > 1 else None
     policy = plan_to_policy(plan) if plan is not None else None
     stream = _param_stream(plan)
+    opt_stream = _opt_stream(plan)
+    residency = plan.residency if plan is not None else {}
+    params_host = residency.get("params") == "host"
+    grads_host = residency.get("grads") == "host"
     opt_init, opt_update = OPTIMIZERS[tcfg.optimizer]
     sched = SCHEDULES["warmup_cosine"]
     m = tcfg.microbatches
@@ -161,11 +364,21 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     hooks = None
     if overlap:
         # per-layer reduce inside the scan backward; with accumulation the
-        # hooks keep only this rank's 1/|data| shard (no per-microbatch AG)
+        # hooks keep only this rank's 1/|data| shard (no per-microbatch AG).
+        # On grads-host plans the m==1 hook sinks each reduced cotangent to
+        # pinned host as it is produced (the gradient host sink), so only
+        # ~prefetch_depth layers of grads are ever device-resident — gated
+        # on the streamed optimizer sweep existing to read them back layer
+        # by layer (a resident monolithic update would re-read the whole
+        # sunk tree at once: a pure host round trip). The m>1 shard path
+        # never sinks: its accumulator is already 1/|data| flat on device.
         hooks = ddl_overlap.make_stack_hooks(
             _stack_group_specs(pspecs), tcfg.ddl, data_axis="data",
             pod_axis=pod_axis, data_size=data_size, pod_size=pod_size,
-            keep="shard" if m > 1 else "full")
+            keep="shard" if m > 1 else "full",
+            sink=(effective_kind("pinned_host")
+                  if grads_host and m == 1 and opt_stream is not None
+                  else None))
     if overlap and m > 1:
         stacked = _stacked_mask(pshapes)
         sspec = ddl_overlap.shard_spec(pshapes, data_size, stacked)
@@ -179,38 +392,47 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
         return loss, metrics
 
     def grads_of(params, batch):
-        """-> (loss, metrics, grads). With overlap the decoder-stack grads
-        come back already reduced (fully for m==1; for m>1 the whole tree
-        is accumulated as reduce-scattered shards and all-gathered once)."""
+        """-> (loss, metrics, grads). `metrics` is the model's REAL aux
+        metrics ({"ce", "aux"}: cross-entropy and the MoE load-balance
+        loss), microbatch-averaged — not fabricated placeholders. With
+        overlap the decoder-stack grads come back already reduced (fully
+        for m==1; for m>1 the whole tree is accumulated as reduce-scattered
+        shards and all-gathered once)."""
         if m > 1:
             mb_batch = _microbatch_split(batch, m)
+            zero_metrics = {"ce": jnp.float32(0.0), "aux": jnp.float32(0.0)}
             if overlap:
                 def micro(carry, mb):
-                    acc, l_acc = carry
-                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    acc, l_acc, m_acc = carry
+                    (l, mets), g = jax.value_and_grad(loss_fn, has_aux=True)(
                         params, mb)
                     loc = ddl_overlap.collect_local_shards(
                         g, sspec, stacked, data_axis="data",
                         pod_axis=pod_axis, mean_over=mean_over,
                         compress_dcn=tcfg.ddl.compress_dcn)
-                    return (acc + loc, l_acc + l), None
+                    m_acc = compat.tree.map(jnp.add, m_acc, mets)
+                    return (acc + loc, l_acc + l, m_acc), None
 
                 acc0 = jnp.zeros((sspec.local_size,), jnp.float32)
-                (loc, l), _ = jax.lax.scan(micro, (acc0, jnp.float32(0.0)),
-                                           mb_batch)
+                (loc, l, mets), _ = jax.lax.scan(
+                    micro, (acc0, jnp.float32(0.0), zero_metrics), mb_batch)
                 g = ddl_overlap.allgather_local_shards(loc / m, sspec,
                                                        data_axis="data")
-                return l / m, {"ce": l / m, "aux": jnp.float32(0.0)}, g
+                return l / m, compat.tree.map(lambda x: x / m, mets), g
 
             def micro(carry, mb):
-                g_acc, l_acc = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-                return (compat.tree.map(jnp.add, g_acc, g), l_acc + l), None
+                g_acc, l_acc, m_acc = carry
+                (l, mets), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                m_acc = compat.tree.map(jnp.add, m_acc, mets)
+                return (compat.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        m_acc), None
 
             zero = compat.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (g, l), _ = jax.lax.scan(micro, (zero, jnp.float32(0.0)), mb_batch)
+            (g, l, mets), _ = jax.lax.scan(
+                micro, (zero, jnp.float32(0.0), zero_metrics), mb_batch)
             g = compat.tree.map(lambda x: x / m, g)
-            return l / m, {"ce": l / m, "aux": jnp.float32(0.0)}, g
+            return l / m, compat.tree.map(lambda x: x / m, mets), g
         (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return l, metrics, g
 
@@ -222,6 +444,16 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
             grads, _ = ddl_reduce_tree(grads, tcfg.ddl, data_axis="data",
                                        pod_axis=pod_axis, data_size=data_size,
                                        pod_size=pod_size, param_specs=pspecs)
+            if grads_host and opt_stream is not None:
+                # no in-scan hooks to sink per layer: honor the residency
+                # with a post-hoc placement of the stacked grads, which the
+                # streamed optimizer sweep then reads back layer by layer
+                # (fallback; the O(params/L) working-set claim needs
+                # overlap=True). With a RESIDENT optimizer the monolithic
+                # update would re-read the whole tree at once — a pure host
+                # round trip — so the placement is skipped then.
+                stacks, rest = _split_stack_grads(grads)
+                grads = _merge_stack_grads(rest, stream_layer_to_host(stacks))
         elif m == 1:
             # in-scan hooks reduced the decoder stacks during the backward
             # sweep; only the unscanned remainder goes through the tree pass
@@ -234,14 +466,27 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
             grads = _merge_stack_grads(rest, stacks)
         # else: m > 1 overlapped — the sharded accumulator already returned
         # the fully reduced tree
-        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         loss = jax.lax.pmean(loss, dpa)
         lr = sched(state.step, base_lr=tcfg.learning_rate,
                    warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
-        new_params, new_opt = opt_update(
-            grads, opt_state, params, lr=lr, beta1=tcfg.beta1, beta2=tcfg.beta2,
-            weight_decay=tcfg.weight_decay)
-        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        if opt_stream is not None:
+            # streamed optimizer sweep: same gnorm/clip/update math as the
+            # resident path, applied per layer slice with swap-in/swap-out
+            gnorm = global_norm(grads)
+            scale = clip_scale(gnorm, tcfg.grad_clip)
+            new_params, new_opt = _streamed_opt_update(
+                tcfg.optimizer, grads, opt_state, params, cfg=cfg, lr=lr,
+                beta1=tcfg.beta1, beta2=tcfg.beta2,
+                weight_decay=tcfg.weight_decay, clip_scale=scale,
+                schedule=opt_stream, params_host=params_host)
+        else:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+            new_params, new_opt = opt_update(
+                grads, opt_state, params, lr=lr, beta1=tcfg.beta1,
+                beta2=tcfg.beta2, weight_decay=tcfg.weight_decay)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                       "ce": jax.lax.pmean(metrics["ce"], dpa),
+                       "aux": jax.lax.pmean(metrics["aux"], dpa)}
         return TrainState(state.step + 1, new_params, new_opt), out_metrics
 
     # shard_map: manual over DP axes only; GSPMD handles `model`
@@ -252,7 +497,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
     # inputs are only DP-sharded, so their physical specs double as the
     # manual specs for the shard_map over the DP axes
     batch_manual = bshards
-    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                    "ce": P(), "aux": P()}
 
     step_sm = compat.shard_map(
         per_replica, mesh=mesh,
@@ -381,8 +627,7 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
         loss = jax.lax.pmean(loss, dpa)
         gn_local = jnp.sum(shard_g.astype(jnp.float32) ** 2)
         gnorm = jnp.sqrt(jax.lax.psum(gn_local, "data"))
-        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
-        shard_g = shard_g * scale
+        shard_g = shard_g * clip_scale(gnorm, tcfg.grad_clip)
         # optimizer update on the 1/|data| shard
         step = state.step + 1
         lr = sched(state.step, base_lr=tcfg.learning_rate,
@@ -405,14 +650,17 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
             new_params = compat.tree.map(
                 lambda old, new: new.astype(old.dtype),
                 state.params, unpack(flat_p, pspec_obj))
-        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                       "ce": jax.lax.pmean(metrics["ce"], dpa),
+                       "aux": jax.lax.pmean(metrics["aux"], dpa)}
         return Zero1State(step, new_params, mu, nu, master), out_metrics
 
     replicated = compat.tree.map(lambda _: P(), pspecs)
     state_manual = Zero1State(P(), replicated, P("data"), P("data"), P("data"))
     _, bshards = model.input_specs(tcfg.shape, mesh)
     batch_manual = bshards
-    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                    "ce": P(), "aux": P()}
 
     step_sm = compat.shard_map(per_replica, mesh=mesh,
                                in_specs=(state_manual, batch_manual),

@@ -129,7 +129,11 @@ class Trainer:
             dt = self.timer.stop()
             metrics_hist.append({"step": i + 1, "loss": loss,
                                  "grad_norm": float(metrics["grad_norm"]),
-                                 "lr": float(metrics["lr"]), "time_s": dt})
+                                 "lr": float(metrics["lr"]), "time_s": dt,
+                                 # model aux metrics (real, not fabricated):
+                                 # ce = cross-entropy, aux = MoE balance loss
+                                 "ce": float(metrics["ce"]),
+                                 "aux": float(metrics["aux"])})
             if self.hb:
                 self.hb.beat(self.process, i + 1, dt)
             if on_step:

@@ -57,6 +57,27 @@ def test_gc_keeps_last_k(tmpdir):
     assert ck.all_steps() == [3, 4]
 
 
+def test_gc_keep_zero_means_keep_all(tmpdir):
+    """Regression: keep=0 used to make _gc delete EVERY checkpoint
+    (`steps[:-0]` == all steps), including the one just written. keep<=0 is
+    keep-all semantics."""
+    ck = Checkpointer(tmpdir, keep=0, async_save=False)
+    for s in (1, 2, 3):
+        ck.save(s, _state(s))
+    assert ck.all_steps() == [1, 2, 3]
+    assert ck.latest_step() == 3
+    ck_neg = Checkpointer(tmpdir, keep=-1, async_save=False)
+    ck_neg.save(4, _state(4))
+    assert ck_neg.all_steps() == [1, 2, 3, 4]
+
+
+def test_keep_validated_in_init(tmpdir):
+    with pytest.raises(TypeError):
+        Checkpointer(tmpdir, keep="3")
+    with pytest.raises(TypeError):
+        Checkpointer(tmpdir, keep=True)
+
+
 def test_async_save_waits(tmpdir):
     ck = Checkpointer(tmpdir, async_save=True)
     ck.save(5, _state())

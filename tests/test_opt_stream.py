@@ -1,0 +1,330 @@
+"""Streamed optimizer sweep + gradient host sink — the EXECUTED half of
+`residency["optimizer"] / ["grads"] == "host"`.
+
+The headline contract: the per-layer streamed optimizer sweep must be
+numerically BYTE-IDENTICAL to the resident monolithic update (the shared
+per-slice kernels in optim/adamw.py are elementwise, and elementwise math is
+slicing-invariant; on a single memory space every swap op is the identity).
+Plus the new planner invariant: a plan may not report `fits` for a residency
+class no executor stream exists for."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.util import run_py
+
+from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, SHAPES,
+                               SINGLE_POD, ShapeConfig, TrainConfig)
+from repro.configs import get_config, get_smoke_config
+from repro.core.lms.planner import (MemoryPlan, check_schedule_invariant,
+                                    make_swap_schedule, plan_memory)
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+
+
+def _plan(cfg, residency, depth=2):
+    sched = make_swap_schedule(residency, cfg.num_layers, "train",
+                               prefetch_depth=depth)
+    return MemoryPlan({}, dict(residency), 1, 1, 1, 1, True,
+                      swap_schedule=sched)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def _run_steps(model, tcfg, mesh, plan, batch, steps=3):
+    from repro.train.steps import build_train_step, init_train_state
+    fn, ssh, bsh = build_train_step(model, tcfg, mesh, plan=plan,
+                                    donate=False)
+    state = jax.device_put(init_train_state(model, tcfg, jax.random.key(1)),
+                           ssh)
+    b = jax.device_put(batch, bsh)
+    ms = []
+    for _ in range(steps):
+        state, m = fn(state, b)
+        ms.append(m)
+    return ms, state
+
+
+# ---------------------------------------------------------------------------
+# Exact streamed-vs-resident parity (single device; adamw + sgdm; depth 2
+# regroups the sweep to 2 layers per iteration — still exact, the update is
+# elementwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimizer", ["adamw", "sgdm"])
+@pytest.mark.parametrize("microbatches", [1, 2])
+def test_streamed_opt_exactly_matches_resident(optimizer, microbatches):
+    cfg = get_smoke_config("olmo-1b")
+    model = Model(cfg, attn_impl="naive")
+    mesh_spec = MeshSpec((1, 1), ("data", "model"))
+    mesh = make_mesh(mesh_spec)
+    tcfg = TrainConfig(model=cfg, shape=ShapeConfig("smoke", "train", 16, 2),
+                       mesh=mesh_spec, ddl=DDLConfig(mode="allreduce"),
+                       warmup_steps=1, learning_rate=1e-2, total_steps=10,
+                       optimizer=optimizer, microbatches=microbatches)
+    plan = _plan(cfg, {"params": "device", "grads": "device",
+                       "optimizer": "host", "kvcache": "device"})
+    assert plan.swap_schedule.streams_optimizer
+    assert not plan.swap_schedule.streams_params
+    batch = _batch(cfg)
+    ms_res, st_res = _run_steps(model, tcfg, mesh, None, batch)
+    ms_str, st_str = _run_steps(model, tcfg, mesh, plan, batch)
+    for a, b in zip(ms_res, ms_str):
+        assert float(a["loss"]) == float(b["loss"])
+        assert float(a["grad_norm"]) == float(b["grad_norm"])
+    for x, y in zip(jax.tree.leaves(st_res), jax.tree.leaves(st_str)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_full_residency_streamed_step_exact_single_device():
+    """params+grads+optimizer all host at prefetch depth 1 (the structure-
+    preserving depth): the whole residency map executes and the trajectory
+    is bitwise the resident one. dp=1 forces overlap off, so this also
+    exercises the post-hoc grads-host placement fallback."""
+    cfg = get_smoke_config("olmo-1b")
+    model = Model(cfg, attn_impl="naive")
+    mesh_spec = MeshSpec((1, 1), ("data", "model"))
+    mesh = make_mesh(mesh_spec)
+    tcfg = TrainConfig(model=cfg, shape=ShapeConfig("smoke", "train", 16, 2),
+                       mesh=mesh_spec, ddl=DDLConfig(mode="allreduce"),
+                       warmup_steps=1, learning_rate=1e-2, total_steps=10)
+    plan = _plan(cfg, {"params": "host", "grads": "host",
+                       "optimizer": "host", "kvcache": "device"}, depth=1)
+    assert plan.swap_schedule.streams_params
+    assert plan.swap_schedule.streams_grads
+    batch = _batch(cfg)
+    ms_res, st_res = _run_steps(model, tcfg, mesh, None, batch)
+    ms_str, st_str = _run_steps(model, tcfg, mesh, plan, batch)
+    for a, b in zip(ms_res, ms_str):
+        assert float(a["loss"]) == float(b["loss"])
+    for x, y in zip(jax.tree.leaves(st_res), jax.tree.leaves(st_str)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_streamed_rest_chunking_exact():
+    """Remainder leaves >= 1M elements take the chunked scan path (the
+    fp32 embedding state must not land in HBM whole); chunking is a
+    reshape around the same elementwise kernel, so it stays exact."""
+    from repro.optim.adamw import (adamw_init, adamw_update,
+                                   clip_by_global_norm, clip_scale,
+                                   global_norm)
+    from repro.train.steps import _streamed_opt_update
+    cfg = get_smoke_config("olmo-1b")          # stack_plan: one 2-layer scan
+    rng = np.random.default_rng(0)
+    f32 = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    params = {"embed": {"w": f32(4096, 256)},  # 2^20 elements -> chunks
+              "decoder": {"stack0": {"w": f32(cfg.num_layers, 8, 8)}},
+              "final_norm": {"scale": f32(8)}}
+    grads = jax.tree.map(lambda p: f32(*p.shape), params)
+    state = adamw_init(params)
+    sched = make_swap_schedule({"optimizer": "host"}, cfg.num_layers, "train")
+    kw = dict(lr=0.1, beta1=0.9, beta2=0.95, weight_decay=0.1)
+
+    # jit both legs, as the step builder does — eager op-by-op dispatch vs
+    # a compiled scan body differ by FMA fusion (1 ulp), not by the sweep
+    @jax.jit
+    def ref(g, s, p):
+        gc, _ = clip_by_global_norm(g, 1.0)
+        return adamw_update(gc, s, p, **kw)
+
+    @jax.jit
+    def streamed(g, s, p):
+        return _streamed_opt_update(
+            "adamw", g, s, p, cfg=cfg,
+            clip_scale=clip_scale(global_norm(g), 1.0),
+            schedule=sched, params_host=False, **kw)
+
+    ref_p, ref_s = ref(grads, state, params)
+    new_p, new_s = streamed(grads, state, params)
+    for a, b in zip(jax.tree.leaves((ref_p, ref_s)),
+                    jax.tree.leaves((new_p, new_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Multi-device parity: full residency map under the overlapped backward
+# (hooks sink each reduced cotangent; sweep consumes layer by layer)
+# ---------------------------------------------------------------------------
+
+OPT_STREAM_MESH = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.config.base import TrainConfig, ShapeConfig, MeshSpec, DDLConfig
+from repro.core.lms.planner import MemoryPlan, make_swap_schedule
+from repro.train.steps import build_train_step, init_train_state
+from repro.launch.mesh import make_mesh
+mesh_spec = MeshSpec(MESHSHAPE, MESHAXES)
+mesh = make_mesh(mesh_spec)
+cfg = get_smoke_config("olmo-1b")
+model = Model(cfg, attn_impl="naive")
+shape = ShapeConfig("smoke", "train", 32, 8)
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+residency = {"params": "host", "grads": "host", "optimizer": "host",
+             "kvcache": "device"}
+sched = make_swap_schedule(residency, cfg.num_layers, "train",
+                           prefetch_depth=1)
+assert sched.streams_params and sched.streams_optimizer and sched.streams_grads
+plan = MemoryPlan({}, residency, 1, 1, 1, 1, True, swap_schedule=sched)
+
+def run_steps(microbatches, plan, steps=3):
+    tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
+                       ddl=DDLConfig(mode="allreduce"), warmup_steps=1,
+                       learning_rate=1e-2, total_steps=50,
+                       microbatches=microbatches)
+    fn, ssh, bsh = build_train_step(model, tcfg, mesh, donate=False,
+                                    overlap_grads=True, plan=plan)
+    s = jax.device_put(init_train_state(model, tcfg, jax.random.key(0)), ssh)
+    b = jax.device_put(batch, bsh)
+    ms = []
+    for _ in range(steps):
+        s, m = fn(s, b)
+        ms.append(m)
+    return ms, s
+
+# identical collectives in both legs; the only delta is placement ops
+# (identity on one memory space) + elementwise slicing: exact equality
+for m in MICROBATCHES:
+    ms_res, s_res = run_steps(m, None)
+    ms_str, s_str = run_steps(m, plan)
+    for a, b in zip(ms_res, ms_str):
+        assert float(a["loss"]) == float(b["loss"]), (m, a, b)
+        assert float(a["grad_norm"]) == float(b["grad_norm"]), (m, a, b)
+    for x, y in zip(jax.tree.leaves(s_res), jax.tree.leaves(s_str)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+print("OPT-STREAM-MESH-OK")
+"""
+
+
+def test_opt_stream_parity_1d_mesh_overlapped():
+    code = (OPT_STREAM_MESH
+            .replace("MESHSHAPE", "(4,)")
+            .replace("MESHAXES", '("data",)')
+            .replace("MICROBATCHES", "(1, 2)"))
+    assert "OPT-STREAM-MESH-OK" in run_py(code, devices=4)
+
+
+def test_opt_stream_parity_2d_mesh_overlapped():
+    code = (OPT_STREAM_MESH
+            .replace("MESHSHAPE", "(2, 2)")
+            .replace("MESHAXES", '("pod", "data")')
+            .replace("MICROBATCHES", "(1,)"))
+    assert "OPT-STREAM-MESH-OK" in run_py(code, devices=4)
+
+
+# ---------------------------------------------------------------------------
+# Planner invariant: no fits=True for residency the executor can't deliver
+# ---------------------------------------------------------------------------
+
+def test_schedule_invariant_raises_for_unexecutable_residency():
+    residency = {"params": "device", "grads": "device",
+                 "optimizer": "host", "kvcache": "device"}
+    with pytest.raises(AssertionError, match="optimizer"):
+        check_schedule_invariant(residency, None)
+    # a schedule that streams the class satisfies it
+    check_schedule_invariant(
+        residency, make_swap_schedule(residency, 4, "train"))
+    # so does declaring it placement-only by design
+    check_schedule_invariant(residency, None, placement_only=("optimizer",))
+
+
+def test_planner_streams_every_host_class():
+    """The original bug: the plan priced optimizer/grads host residency and
+    reported fits=True with no executor stream. Now every host class of a
+    train plan must stream (or be placement-only by documented design)."""
+    plan = plan_memory(get_config("qwen2-72b"), SHAPES["train_4k"],
+                       SINGLE_POD, LMSConfig())
+    assert plan.residency["optimizer"] == "host"
+    assert plan.residency["grads"] == "host"
+    s = plan.swap_schedule
+    assert s.streams_optimizer and s.streams_grads and s.streams_params
+    assert s.bytes_for("optimizer") > 0 and s.bytes_for("grads") > 0
+    assert plan.fits
+
+
+def test_planner_gates_grads_host_on_executability():
+    """The sink only exists for overlap + microbatches==1 + streamed
+    optimizer; in any other configuration promising grads host residency
+    would be the fits=True fiction again."""
+    # microbatch accumulation: the accumulator all-gathers the full f32
+    # tree on device — no per-layer sink exists
+    plan = plan_memory(get_config("qwen2-72b"), SHAPES["train_4k"],
+                       SINGLE_POD, LMSConfig(), microbatches=4)
+    assert plan.residency["grads"] == "device"
+    assert plan.swap_schedule is None or not plan.swap_schedule.streams_grads
+    # resident optimizer: the monolithic update would re-read the whole
+    # sunk tree at once, so no sink is promised either
+    plan = plan_memory(get_config("qwen2-72b"), SHAPES["train_4k"],
+                       SINGLE_POD, LMSConfig(offload_optimizer="never"))
+    assert plan.residency["optimizer"] == "device"
+    assert plan.residency["grads"] == "device"
+
+
+def test_planner_zero1_optimizer_is_placement_only():
+    plan = plan_memory(get_config("grok-1-314b"), SHAPES["train_4k"],
+                       SINGLE_POD, LMSConfig(), zero1=True)
+    assert plan.residency["optimizer"] == "host"
+    assert plan.placement_only == ("optimizer",)  # flat 1/|data| shard
+    assert not plan.swap_schedule.streams_optimizer
+    # zero1 grads are consumed as in-step reduce-scattered shards: the
+    # planner must not promise (or price) host residency for them
+    assert plan.residency["grads"] == "device"
+    assert plan.swap_schedule.bytes_for("grads") == 0
+    # the invariant itself still holds at plan time (plan_memory ran it)
+    check_schedule_invariant(plan.residency, plan.swap_schedule,
+                             plan.placement_only)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: _microbatch_split + real model metrics
+# ---------------------------------------------------------------------------
+
+def test_microbatch_split_rejects_non_divisible_leading_dim():
+    from repro.train.steps import _microbatch_split
+    batch = {"tokens": jnp.ones((6, 4), jnp.int32),
+             "labels": jnp.ones((6, 4), jnp.int32)}
+    out = _microbatch_split(batch, 3)
+    assert out["tokens"].shape == (3, 2, 4)
+    # scalars broadcast (the only legitimate broadcast)
+    out = _microbatch_split({"tokens": jnp.ones((6, 4)), "pos": jnp.int32(7)}, 2)
+    assert out["pos"].shape == (2,)
+    # a non-divisible leading dim must raise, naming the leaf — the old
+    # broadcast_to fallback silently trained on m duplicated batches
+    with pytest.raises(ValueError, match="labels"):
+        _microbatch_split({"tokens": jnp.ones((6, 4), jnp.int32),
+                           "labels": jnp.ones((7, 4), jnp.int32)}, 3)
+
+
+@pytest.mark.parametrize("microbatches", [1, 2])
+def test_step_metrics_carry_real_model_aux(microbatches):
+    """`per_replica` used to rebuild metrics from scratch (m==1) or
+    fabricate {"ce","aux"} (microbatch paths). A MoE model's load-balance
+    loss must survive into the step metrics on every path."""
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    model = Model(cfg, attn_impl="naive")
+    mesh_spec = MeshSpec((1, 1), ("data", "model"))
+    mesh = make_mesh(mesh_spec)
+    tcfg = TrainConfig(model=cfg, shape=ShapeConfig("smoke", "train", 16, 2),
+                       mesh=mesh_spec, ddl=DDLConfig(mode="allreduce"),
+                       warmup_steps=1, learning_rate=1e-2, total_steps=10,
+                       microbatches=microbatches)
+    ms, _ = _run_steps(model, tcfg, mesh, None, _batch(cfg), steps=1)
+    m = ms[0]
+    assert set(m) >= {"loss", "grad_norm", "lr", "ce", "aux"}
+    assert float(m["aux"]) > 0.0          # MoE balance loss, not a 0.0 stub
+    # loss = ce + aux_weight * aux (model.loss contract)
+    np.testing.assert_allclose(float(m["loss"]),
+                               float(m["ce"]) + 0.01 * float(m["aux"]),
+                               rtol=1e-5)
