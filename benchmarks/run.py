@@ -7,6 +7,7 @@ snapshot (the perf trajectory CI tracks).
   Tab 1/Fig 3 -> bench_scaling     (DP scaling, modeled + measured)
   Tab 2 / s3.1 -> bench_accuracy_parity (convergence parity)
   kernels -> bench_kernels         (hot-spot microbenchmarks)
+  serving -> bench_serve           (engine vs static batch; measured)
 
 ``--smoke`` runs the fast analytic tables plus the one small measured row
 the residency-execution gate needs (streamed-optimizer vs resident, a
@@ -33,7 +34,7 @@ def _import_modules():
     (exit 1), not a silently shrunk benchmark table."""
     import importlib
     names = ["bench_ddl_allreduce", "bench_lms_overhead", "bench_scaling",
-             "bench_kernels", "bench_accuracy_parity"]
+             "bench_kernels", "bench_accuracy_parity", "bench_serve"]
     mods = {}
     failures = []
     for n in names:
@@ -65,6 +66,7 @@ def main() -> None:
             ("fig2b", b["bench_lms_overhead"].run),
             ("fig2bo", b["bench_lms_overhead"].run_opt_stream_measured),
             ("tab1", b["bench_scaling"].run),
+            ("serve", b["bench_serve"].run),
         ]
     else:
         modules = [
@@ -77,6 +79,7 @@ def main() -> None:
             ("tab1m", b["bench_scaling"].run_measured),
             ("kern", b["bench_kernels"].run),
             ("tab2", b["bench_accuracy_parity"].run),
+            ("serve", b["bench_serve"].run),
         ]
     print("name,us_per_call,derived")
     rows, failures = [], 0

@@ -1,4 +1,7 @@
-"""Batched serving example: prefill a batch of prompts, decode greedily.
+"""Continuous-batching serving example: 8 requests through 2 decode slots —
+prompts chunk-prefill, spill to the host page arena while the slots are
+busy, and join the fixed-shape decode batch as earlier requests finish.
+Run with --static to see the whole-batch baseline loop instead.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -7,5 +10,7 @@ import sys
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    sys.exit(main(["--arch", "olmo-1b", "--smoke", "--batch", "4",
-                   "--prompt-len", "32", "--gen", "16"]))
+    sys.exit(main(["--arch", "olmo-1b", "--smoke", "--requests", "8",
+                   "--slots", "2", "--prompt-len", "32", "--gen", "16",
+                   "--page-size", "8", "--prefill-chunk", "16"]
+                  + sys.argv[1:]))

@@ -15,6 +15,13 @@ python -m pytest --collect-only -q tests/ > /dev/null
 echo "== bench smoke =="
 python benchmarks/run.py --smoke
 test -s BENCH_smoke.json
+# the serving gate: the engine-vs-static row must land in the snapshot
+python - <<'EOF'
+import json
+rows = json.load(open("BENCH_smoke.json"))["rows"]
+assert any(r["table"] == "serve" and r["name"].startswith("serve_engine")
+           for r in rows), "bench_serve engine row missing from BENCH_smoke"
+EOF
 
 echo "== tier-1 =="
 python -m pytest -x -q

@@ -117,6 +117,34 @@ class SwapSchedule:
         return (1 if self.fwd_order else 0) + (1 if self.bwd_order else 0)
 
 
+@dataclass(frozen=True)
+class KVPagingPlan:
+    """Sizing of the paged, host-spilling KV pool (serve/kvpool.py) — the
+    SERVING-side executor of the kvcache residency class. A page is
+    `page_size` token-positions of the whole layer stack for one slot; the
+    pool keeps active slots' pages in HBM (the decode working set), spills
+    prefilled-but-waiting requests' pages to pinned host, and fetches them
+    back when a slot frees. Admission control reserves a request's full page
+    need up front against `device_pages` (no mid-decode preemption)."""
+    page_size: int            # token-positions per page (whole layer stack)
+    page_bytes: int           # per-device bytes of one page (paged leaves)
+    state_bytes: int          # per-slot seq-independent cache bytes
+    pages_per_slot: int       # pages a full-length slot occupies
+    device_pages: int         # HBM page budget (active working set)
+    host_pages: int           # host arena capacity (spilled backlog)
+    # host STATE-arena capacity in requests (= the priced backlog depth).
+    # Carried explicitly because seq-independent-cache families (ssm/rglru)
+    # have host_pages == 0, so the pool could not derive it
+    host_slots: int = 0
+
+    @property
+    def slot_budget(self) -> int:
+        """Max concurrent full-length slots the device page budget admits."""
+        if self.pages_per_slot <= 0:
+            return self.device_pages
+        return self.device_pages // self.pages_per_slot
+
+
 @dataclass
 class MemoryPlan:
     assignment: Dict[str, str]          # activation name -> save|offload|remat
@@ -136,6 +164,9 @@ class MemoryPlan:
     # Every other host-resident class MUST appear in swap_schedule.stream
     # (check_schedule_invariant enforces this at plan time).
     placement_only: Tuple[str, ...] = ()
+    # serve plans only: the paged-pool sizing that EXECUTES kvcache host
+    # residency (required by check_schedule_invariant when serve=True)
+    kv_paging: Optional[KVPagingPlan] = None
 
     def summary(self) -> str:
         gb = 1024 ** 3
@@ -151,6 +182,11 @@ class MemoryPlan:
                          f"prefetch={s.prefetch_depth} sweeps={s.sweeps_per_step}")
         if self.placement_only:
             lines.append(f"  placement-only: {list(self.placement_only)}")
+        if self.kv_paging is not None:
+            kp = self.kv_paging
+            lines.append(f"  kv paging: page={kp.page_size}tok "
+                         f"dev={kp.device_pages}p host={kp.host_pages}p "
+                         f"({kp.slot_budget} concurrent slots)")
         if self.overlap_grads is not None:
             lines.append(f"  grad reduction: "
                          f"{'overlapped' if self.overlap_grads else 'serialized'}")
@@ -192,13 +228,22 @@ def make_swap_schedule(residency: Dict[str, str], num_layers: int,
 
 def check_schedule_invariant(residency: Dict[str, str],
                              schedule: Optional[SwapSchedule],
-                             placement_only: Tuple[str, ...] = ()) -> None:
-    """Planner invariant (DESIGN.md §6): every residency class priced into
+                             placement_only: Tuple[str, ...] = (), *,
+                             serve: bool = False,
+                             kv_paging: Optional[KVPagingPlan] = None) -> None:
+    """Planner invariant (DESIGN.md §6/§7): every residency class priced into
     `host_bytes` must either appear in `SwapSchedule.stream` (an executor
     stream exists and will run) or be declared placement-only by documented
     design. A plan that promises host residency the executor never delivers
     would report peak/fits numbers that are fiction — fail at plan time, not
-    at OOM time."""
+    at OOM time.
+
+    serve=True (continuous-batching plans): the kvcache stream class is
+    executed by the paged pool (serve/kvpool.py), not the per-layer decode
+    stream — the slot-batched decode step needs every ACTIVE slot's pages in
+    HBM, so the only thing that can deliver host residency is paging the
+    backlog. Host kvcache residency in a serve plan therefore additionally
+    requires a declared `kv_paging` sizing."""
     streams = set(schedule.stream) if schedule is not None else set()
     missing = sorted(c for c, r in residency.items()
                      if r == "host" and c not in streams
@@ -209,6 +254,13 @@ def check_schedule_invariant(residency: Dict[str, str],
             f"executor stream exists (SwapSchedule.stream={sorted(streams)}, "
             f"placement_only={sorted(placement_only)}); the plan's peak/fits "
             "accounting would never be delivered at runtime")
+    if serve and residency.get("kvcache") == "host" and kv_paging is None:
+        raise AssertionError(
+            "serve plan promises host residency for the KV cache but no "
+            "paged-pool executor is declared (kv_paging=None): the "
+            "slot-batched decode step keeps active slots' pages in HBM, so "
+            "only the paging pool (serve/kvpool.py) can execute the "
+            "spill/return traffic this plan prices")
 
 
 def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
@@ -349,6 +401,153 @@ def kv_cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         total += 2 * cfg.num_layers * max(shape.global_batch // dp, 1) * \
             cfg.encoder_seq * max(cfg.num_kv_heads // tp, 1) * cfg.head_dim * 2
     return total
+
+
+def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None) -> int:
+    """Per-device bytes one token-position of the WHOLE layer stack adds to
+    a single slot's pageable KV. Only full-history "attn" layers grow with
+    the sequence; ring (local_attn) and recurrent (ssd/rglru) caches are
+    seq-independent per-slot state, and the encoder-decoder cross cache is
+    fixed at encoder_seq — all of those are state, not pages."""
+    tp = _axis_size(mesh, "model")
+    kvh_f = tp if cfg.num_kv_heads % max(tp, 1) == 0 else 1
+    seq_f = _logical_factor(mesh, "kv_seq", rules)
+    f = max(kvh_f, seq_f)
+    per = 0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            per += 2 * cfg.num_kv_heads * cfg.head_dim * 2 // f
+    return per
+
+
+def price_kv_paging(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
+                    budget: int, page_size: int = 64,
+                    slots: Optional[int] = None,
+                    backlog_slots: Optional[int] = None,
+                    rules=None) -> KVPagingPlan:
+    """Size the paged KV pool for a serve plan: how many pages of decode KV
+    fit the pool's HBM allotment after the per-slot recurrent state is
+    charged — the device page budget the engine's admission control
+    reserves against — plus a host arena sized for the
+    prefilled-but-waiting backlog.
+
+    `budget` is the HBM allotted to the KV pool on one device — the CALLER
+    (plan_serve_memory) has already charged the weights' residency and the
+    decode transients against the full budget. A page is `page_size`
+    token-positions of every attn layer's k+v for one slot; requests
+    reserve ceil(total_len / page_size) pages at admission."""
+    dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+    b = max(shape.global_batch // dp, 1)
+    slots = slots or b
+    backlog = backlog_slots if backlog_slots is not None else 2 * slots
+    # the pool requires the page grid to tile the cache exactly; snap to
+    # the largest dividing page size so plan and executor agree
+    page_size = math.gcd(shape.seq_len, page_size)
+
+    token_bytes = kv_token_bytes_dev(cfg, mesh, rules)
+    shape1 = dataclasses.replace(shape, global_batch=dp)       # per-slot view
+    per_slot_total = kv_cache_bytes_dev(cfg, shape1, mesh, rules=rules)
+    paged_per_slot = token_bytes * shape.seq_len
+    state_bytes = max(per_slot_total - paged_per_slot, 0)
+    pages_per_slot = -(-shape.seq_len // page_size) if token_bytes else 0
+    page_bytes = token_bytes * page_size
+
+    free = budget - slots * state_bytes
+    if page_bytes:
+        # at least one full-length slot must fit or serving cannot make
+        # progress; beyond slots*pages_per_slot extra pages are unusable
+        # (the device arena IS the slot-batched decode cache)
+        device_pages = max(free // page_bytes, pages_per_slot)
+        device_pages = min(device_pages, slots * pages_per_slot)
+    else:
+        device_pages = 0
+    return KVPagingPlan(page_size=page_size, page_bytes=int(page_bytes),
+                        state_bytes=int(state_bytes),
+                        pages_per_slot=int(pages_per_slot),
+                        device_pages=int(device_pages),
+                        host_pages=int(backlog * pages_per_slot),
+                        host_slots=int(backlog))
+
+
+def plan_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                      lms: LMSConfig = LMSConfig(),
+                      hw: hwlib.HardwareSpec = hwlib.DEFAULT, *,
+                      slots: Optional[int] = None,
+                      backlog_slots: Optional[int] = None,
+                      page_size: int = 64, rules=None) -> MemoryPlan:
+    """Serving-engine plan (continuous batching over `slots` decode slots
+    with a `backlog_slots`-deep admission queue): decode-shape residency
+    PLUS the paged-pool sizing that executes kvcache host residency.
+
+    Unlike the static decode plan — whose kvcache stream is executed per
+    layer inside the decode scan — a serve plan's host KV residency means
+    the AGGREGATE footprint (active slots + prefilled backlog) exceeds the
+    device page budget, and the paged pool spills the backlog while the
+    decode working set stays in HBM. check_schedule_invariant(serve=True)
+    refuses the promise unless the pool sizing is attached."""
+    if shape.kind != "decode":
+        raise ValueError(f"serve plans are decode-shaped, got {shape.kind!r}")
+    budget = (lms.hbm_budget or hw.hbm_bytes)
+    budget = int(budget * (1.0 - lms.workspace_frac))
+    tp = _axis_size(mesh, "model")
+    dp = _axis_size(mesh, "data") * _axis_size(mesh, "pod")
+    b = max(shape.global_batch // dp, 1)
+    slots = slots or b
+    backlog = backlog_slots if backlog_slots is not None else 2 * slots
+    L = cfg.num_layers
+    notes: List[str] = []
+    class_swap: Dict[str, int] = {}
+    residency = {"params": "device", "kvcache": "device"}
+
+    params_dev = 2 * cfg.param_count() // tp
+    act_shape = dataclasses.replace(shape, seq_len=1)
+    acts = activation_classes(cfg, act_shape, mesh)
+    transient = max((a.bytes_dev for a in acts), default=0) * 3
+    shape1 = dataclasses.replace(shape, global_batch=dp)
+    per_slot = kv_cache_bytes_dev(cfg, shape1, mesh, rules=rules)
+
+    params_eff = params_dev
+    host = 0
+    if lms.enabled and lms.offload_params != "never" and \
+            params_dev + slots * per_slot + transient > budget:
+        params_eff = 2 * params_dev // max(L, 1)
+        host += params_dev
+        class_swap["params"] = params_dev          # one sweep per decode step
+        residency["params"] = "host"
+        notes.append("params host-resident, streamed per layer")
+
+    paging = None
+    demand = (slots + backlog) * per_slot          # trace working set
+    if lms.enabled and params_eff + demand + transient > budget:
+        paging = price_kv_paging(cfg, shape, mesh,
+                                 budget=budget - params_eff - transient,
+                                 page_size=page_size, slots=slots,
+                                 backlog_slots=backlog, rules=rules)
+        residency["kvcache"] = "host"
+        # one request's lifecycle: prefill pages spill out, then return
+        class_swap["kvcache"] = 2 * paging.pages_per_slot * paging.page_bytes
+        host += paging.host_pages * paging.page_bytes + \
+            backlog * paging.state_bytes
+        kv_dev = paging.device_pages * paging.page_bytes + \
+            slots * paging.state_bytes
+        notes.append(
+            f"KV backlog host-resident via paged pool: {paging.device_pages} "
+            f"device pages ({paging.slot_budget} concurrent slots), "
+            f"{paging.host_pages} host pages")
+    else:
+        kv_dev = demand if not lms.enabled else slots * per_slot
+        if lms.enabled:
+            notes.append("aggregate KV fits: pool not required")
+
+    peak = params_eff + kv_dev + transient
+    swap_per_step = sum(class_swap.values())
+    schedule = make_swap_schedule(residency, L, "decode",
+                                  swap_bytes=class_swap)
+    check_schedule_invariant(residency, schedule, serve=True,
+                             kv_paging=paging)
+    return MemoryPlan({}, residency, int(peak), int(host), int(swap_per_step),
+                      budget, peak <= budget, notes, swap_schedule=schedule,
+                      kv_paging=paging)
 
 
 def plan_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,

@@ -1,9 +1,11 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-shared KV cache (LMS host-residency applies to the cache when the planner
-says so).
+"""Serving driver. Default path is the continuous-batching engine
+(repro.serve): chunked prefill, slot-batched decode, paged host-spilling KV
+pool, temperature/top-k sampling. `--static` runs the old whole-batch
+prefill-then-decode loop (the baseline the engine is benchmarked and
+parity-tested against).
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --requests 8 --slots 4 --prompt-len 64 --gen 32
 """
 from __future__ import annotations
 
@@ -15,24 +17,81 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import ShapeConfig
+from repro.config.base import MeshSpec, ShapeConfig
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_mesh
-from repro.config.base import MeshSpec
 from repro.models.model import Model
-from repro.train.steps import build_prefill_step, build_decode_step
+from repro.serve import (ServeEngine, decode_step_batch,
+                         static_batch_from_requests, synth_requests)
+from repro.train.steps import build_decode_step, build_prefill_step
+
+
+def run_static(model, mesh, reqs, prompt_len: int, gen: int, params=None):
+    """Static whole-batch greedy baseline: one prefill over every request's
+    prompt, then `gen-1` lockstep decode steps. The ONE jitted prefill path
+    (`build_prefill_step(cache_len=...)`) emits the decode-capacity cache
+    directly. -> (params, tokens [N, gen], timings dict)."""
+    cfg = model.cfg
+    n = len(reqs)
+    total = prompt_len + gen
+    prefill_shape = ShapeConfig("serve_prefill", "prefill", prompt_len, n)
+    prefill_fn, params_sh, _, _ = build_prefill_step(model, prefill_shape,
+                                                     mesh, cache_len=total)
+    decode_shape = ShapeConfig("serve", "decode", total, n)
+    decode_fn, _, _, _ = build_decode_step(model, decode_shape, mesh,
+                                           donate=True)
+    if params is None:
+        params = jax.device_put(model.init(jax.random.key(0)), params_sh)
+    batch = static_batch_from_requests(cfg, reqs)
+
+    t0 = time.monotonic()
+    logits, cache = prefill_fn(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.monotonic() - t0
+
+    toks = jnp.argmax(logits, axis=-1)[:, None]
+    out_tokens = [toks]
+    t0 = time.monotonic()
+    for i in range(gen - 1):
+        pos = jnp.int32(prompt_len + i)
+        step_batch = decode_step_batch(
+            cfg, toks, jnp.full((n,), prompt_len + i, jnp.int32))
+        logits, cache = decode_fn(params, cache, step_batch, pos)
+        toks = jnp.argmax(logits, axis=-1)[:, None]
+        out_tokens.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.monotonic() - t0
+    gen_toks = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    return params, gen_toks, {
+        "prefill_s": t_prefill, "decode_s": t_decode,
+        "decode_tok_s": (gen - 1) * n / max(t_decode, 1e-9)}
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--requests", "--batch", dest="requests", type=int,
+                   default=8, help="request-trace length")
+    p.add_argument("--slots", type=int, default=4,
+                   help="concurrent decode slots (engine)")
     p.add_argument("--prompt-len", type=int, default=64)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--mesh", default="1x1")
-    p.add_argument("--greedy", action="store_true", default=True)
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="0 = greedy; >0 samples")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k filter for sampling (0 = full vocab)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="KV pool page size in tokens")
+    p.add_argument("--prefill-chunk", type=int, default=32,
+                   help="chunked-prefill width (0 = whole prompt)")
+    p.add_argument("--static", action="store_true",
+                   help="run the whole-batch baseline loop instead")
     args = p.parse_args(argv)
+    if args.static and (args.temperature > 0 or args.top_k):
+        p.error("--temperature/--top-k sample in the engine only; the "
+                "--static baseline loop is greedy by construction")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     dims = tuple(int(x) for x in args.mesh.split("x"))
@@ -40,58 +99,32 @@ def main(argv=None):
                          else ("pod", "data", "model"))
     mesh = make_mesh(mesh_spec)
     model = Model(cfg, attn_impl="naive" if args.smoke else "blockwise")
-    total = args.prompt_len + args.gen
-    shape = ShapeConfig("serve", "decode", total, args.batch)
-
-    prefill_shape = ShapeConfig("serve_prefill", "prefill", args.prompt_len,
-                                args.batch)
-    prefill_fn, params_sh, _, _ = build_prefill_step(model, prefill_shape, mesh)
-    decode_fn, _, _, cache_sh = build_decode_step(model, shape, mesh, donate=True)
-
-    params = jax.device_put(model.init(jax.random.key(0)), params_sh)
     rng = np.random.default_rng(0)
-    b = args.batch
-    if cfg.family == "vlm":
-        batch = {"embeds": jnp.asarray(
-            rng.standard_normal((b, args.prompt_len, cfg.d_model)) * 0.02,
-            jnp.bfloat16),
-            "positions3": jnp.tile(jnp.arange(args.prompt_len)[None, None], (3, b, 1))}
-    elif cfg.family == "audio":
-        batch = {"enc_embeds": jnp.asarray(
-            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)) * 0.02,
-            jnp.bfloat16),
-            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, args.prompt_len)), jnp.int32)}
-    else:
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (b, args.prompt_len)), jnp.int32)}
+    reqs = synth_requests(cfg, args.requests, args.prompt_len, args.gen, rng)
 
-    t0 = time.time()
-    # prefill into a decode-sized cache
-    def prefill_into(params, batch):
-        return model.prefill(params, batch, cache_len=total)
-    logits, cache = jax.jit(prefill_into)(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    if args.static:
+        _, gen_toks, t = run_static(model, mesh, reqs, args.prompt_len,
+                                    args.gen)
+        print(f"prefill: {t['prefill_s']*1e3:.1f} ms | decode: "
+              f"{t['decode_s']*1e3:.1f} ms ({t['decode_tok_s']:.1f} tok/s)")
+        print("generated token ids (first row):", gen_toks[0][:16])
+        return 0
 
-    toks = jnp.argmax(logits, axis=-1)[:, None]
-    out_tokens = [toks]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        if cfg.family == "vlm":
-            step_batch = {"embeds": jnp.zeros((b, 1, cfg.d_model), jnp.bfloat16),
-                          "positions3": jnp.full((3, b, 1), args.prompt_len + i)}
-        else:
-            step_batch = {"tokens": toks}
-        logits, cache = decode_fn(params, cache, step_batch, pos)
-        toks = jnp.argmax(logits, axis=-1)[:, None]
-        out_tokens.append(toks)
-    jax.block_until_ready(toks)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"prefill: {t_prefill*1e3:.1f} ms | decode: {t_decode*1e3:.1f} ms "
-          f"({(args.gen-1)*b/max(t_decode,1e-9):.1f} tok/s)")
-    print("generated token ids (first row):", np.asarray(gen[0])[:16])
+    total = args.prompt_len + args.gen
+    eng = ServeEngine(model, mesh, slots=min(args.slots, args.requests),
+                      max_len=total, page_size=args.page_size,
+                      prefill_chunk=args.prefill_chunk,
+                      temperature=args.temperature, top_k=args.top_k)
+    results = eng.run(reqs)
+    m = eng.metrics()
+    returned = int(m["pool_fetched_pages"] + m["pool_prefetched_pages"])
+    print(f"served {len(results)} requests | decode {m['decode_tok_s']:.1f} "
+          f"tok/s | ttft {m.get('ttft_mean_s', 0)*1e3:.1f} ms | "
+          f"concurrency {m['mean_concurrency']:.2f} | pages spilled/returned "
+          f"{int(m['pool_spilled_pages'])}/{returned} "
+          f"({int(m['pool_prefetched_pages'])} staged ahead)")
+    print("generated token ids (first request):",
+          np.asarray(results[reqs[0].rid])[:16])
     return 0
 
 

@@ -197,8 +197,10 @@ def local_block_attention(q, k, v, *, window: int, q_offset: int = 0):
 # ---------------------------------------------------------------------------
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
-    """q [B,1,H,D]; caches [B,Smax,K,D]; kv_len: scalar count of valid slots.
-    For window caches (ring buffers) validity is positional recency."""
+    """q [B,1,H,D]; caches [B,Smax,K,D]; kv_len: count of valid slots —
+    a scalar (whole-batch decode) or a [B] vector (slot-batched decode,
+    each request at its own position). For window caches (ring buffers)
+    validity is positional recency."""
     b, _, h, d = q.shape
     kh = k_cache.shape[2]
     g = h // kh
@@ -206,8 +208,10 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
     qg = q.reshape(b, kh, g, d).astype(jnp.float32) / math.sqrt(d)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
     kpos = jnp.arange(smax)
-    mask = kpos < kv_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    # [1, Smax] for scalar kv_len (same broadcast as before), [B, Smax] for
+    # per-slot lengths
+    mask = kpos[None, :] < jnp.atleast_1d(kv_len)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(b, 1, h, d)

@@ -100,7 +100,7 @@ class Model:
             lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), defs, is_leaf=is_def)
 
     # ---- context ---------------------------------------------------------
-    def _ctx(self, batch: Dict, seq: int, pos=None):
+    def _ctx(self, batch: Dict, seq: int, pos=None, offset=None):
         cfg = self.cfg
         ctx = {"attn_impl": self.attn_impl, "attn_chunk": self.attn_chunk,
                "ssd_impl": self.ssd_impl}
@@ -108,7 +108,10 @@ class Model:
             ctx["positions3"] = batch["positions3"]
         else:
             if pos is None:
-                positions = jnp.arange(seq)[None, :]
+                # offset: chunked prefill — the chunk's tokens sit at
+                # absolute positions [offset, offset+seq)
+                positions = jnp.arange(seq)[None, :] + \
+                    (0 if offset is None else offset)
             else:
                 positions = jnp.full((1, 1), 0, jnp.int32) + pos
             ctx["positions"] = positions
@@ -173,6 +176,45 @@ class Model:
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x[:, -1:])
         return logits[:, 0], cache
+
+    def prefill_chunk(self, params, cache, batch, start, length):
+        """One chunked-prefill step (serve engine): run the C-token chunk in
+        `batch` at absolute positions [start, start+C) against the
+        already-populated cache. `length` is the total valid prompt tokens
+        after this chunk (tail rows past it are padding). -> (chunk logits
+        [B,C,V], cache). Bitwise-equal to whole-prompt prefill per valid row
+        (see apply_layer_prefill_chunk)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        seq = x.shape[1]
+        ctx = self._ctx(batch, seq, offset=start)
+        x, cache = tr.apply_decoder_prefill_chunk(
+            cfg, params["decoder"], cache, x, start, length, ctx,
+            unroll=self.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        return lm_logits(cfg, params["embed"], x), cache
+
+    def decode_slots(self, params, cache, batch, positions, active,
+                     stream=None):
+        """Slot-batched decode (serve engine): each batch row is an
+        independent request. positions [B] int32 per-slot positions,
+        active [B] bool slot mask (inactive rows compute but their cache is
+        held byte-stable). -> (logits [B,V], new_cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch, decode=True)
+        ctx = self._ctx(batch, 1)
+        if cfg.family != "vlm":
+            ctx["positions"] = positions[:, None]
+        if cfg.is_encdec:
+            from repro.models.layers import sinusoidal_row
+            rows = jax.vmap(lambda p: sinusoidal_row(p, cfg.d_model))(positions)
+            x = x + rows[:, None, :].astype(x.dtype)
+        x, new_cache = tr.apply_decoder_decode_slots(
+            cfg, params["decoder"], cache, x, positions, active, ctx,
+            unroll=self.unroll, stream=stream)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits[:, 0], new_cache
 
     def decode_step(self, params, cache, batch, pos, stream=None):
         """batch: {"tokens" [B,1]} (or vlm embeds); pos: scalar int32.

@@ -514,6 +514,201 @@ def apply_layer_decode(cfg, kind, p, x, cache, pos, ctx):
     raise ValueError(kind)
 
 
+def _slot_write(cache_t, new_t, slots, active):
+    """Per-slot cache write: cache [B,S,...], new [B,1,...], slots [B] write
+    positions, active [B] bool. Inactive rows keep their current value, so a
+    freed slot's cache region stays byte-stable until its next occupant's
+    pages are attached."""
+    b = cache_t.shape[0]
+    bidx = jnp.arange(b)
+    cur = cache_t[bidx, slots]
+    val = jnp.where(active.reshape((b,) + (1,) * (cur.ndim - 1)),
+                    new_t[:, 0], cur)
+    return cache_t.at[bidx, slots].set(val)
+
+
+def _gate_state(active, new_tree, old_tree):
+    """Slot-batched state update gate: inactive rows keep the old state."""
+    def sel(n, o):
+        m = active.reshape((n.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return compat.tree.map(sel, new_tree, old_tree)
+
+
+def apply_layer_decode_slots(cfg, kind, p, x, cache, positions, active, ctx):
+    """Slot-batched variant of apply_layer_decode: every batch row is an
+    independent request at its own position. positions [B] int32, active [B]
+    bool. Attention math is row-independent, so an active row's output is
+    identical to what a whole-batch decode at that row's position produces —
+    the token-parity property the serve engine's join/evict churn relies on.
+    """
+    b = x.shape[0]
+    if kind in ("attn", "local_attn"):
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        q, k = _rope_qk(cfg, q, k, ctx)
+        window = cfg.window if kind == "local_attn" else 0
+        smax = cache["k"].shape[1]
+        slots = (positions % smax) if window else jnp.minimum(positions, smax - 1)
+        cache_axes = ("batch", "kv_seq", "kv_heads", None)
+        ck = _slot_write(constrain(cache["k"], *cache_axes), k, slots, active)
+        cv = _slot_write(constrain(cache["v"], *cache_axes), v, slots, active)
+        ck = constrain(ck, *cache_axes)
+        cv = constrain(cv, *cache_axes)
+        # inactive rows mask every key (kv_len 0): finite garbage, never read
+        kv_len = jnp.where(active, jnp.minimum(positions + 1, smax), 0)
+        o = decode_attention(q, ck, cv, kv_len)
+        x = x + out_proj(cfg, p["attn"], o)
+        x, _ = _ffn(cfg, p, x)
+        return x, {"k": ck, "v": cv}
+    if kind == "xattn":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        smax = cache["k"].shape[1]
+        slots = jnp.minimum(positions, smax - 1)
+        ck = _slot_write(cache["k"], k, slots, active)
+        cv = _slot_write(cache["v"], v, slots, active)
+        kv_len = jnp.where(active, jnp.minimum(positions + 1, smax), 0)
+        o = decode_attention(q, ck, cv, kv_len)
+        x = x + out_proj(cfg, p["attn"], o)
+        hx = apply_norm(cfg, p.get("lnx", {}), x)
+        q2 = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"])
+        if "bq" in p["xattn"]:
+            q2 = q2 + p["xattn"]["bq"]
+        o2 = decode_attention(q2, cache["xk"], cache["xv"], cache["xk"].shape[1])
+        x = x + out_proj(cfg, p["xattn"], o2)
+        x, _ = _ffn(cfg, p, x)
+        return x, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+    if kind == "ssd":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        y, new_cache = decode_ssm(cfg, p["ssm"], h, cache)
+        act = active.reshape((b,) + (1,) * (y.ndim - 1))
+        return x + jnp.where(act, y, 0), _gate_state(active, new_cache, cache)
+    if kind == "rglru":
+        h = apply_norm(cfg, p.get("ln1", {}), x)
+        y, new_cache = decode_rglru(cfg, p["rec"], h, cache)
+        act = active.reshape((b,) + (1,) * (y.ndim - 1))
+        x = x + jnp.where(act, y, 0)
+        x, _ = _ffn(cfg, p, x)
+        return x, _gate_state(active, new_cache, cache)
+    raise ValueError(kind)
+
+
+def apply_decoder_decode_slots(cfg, params, caches, x, positions, active, ctx,
+                               unroll: bool = False, stream=None):
+    """Slot-batched decode sweep (the serve engine's fixed-shape step):
+    -> (x, new_caches). stream: SwapSchedule — host-resident PARAMS swap in
+    per layer as in apply_decoder_decode; the KV cache is deliberately NOT
+    per-layer streamed here — in serving its host residency is executed by
+    the paged pool (serve/kvpool.py), which keeps active slots' pages in HBM
+    and spills the backlog, so the decode step always sees a device-resident
+    cache."""
+    new_caches = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, _ = entry
+            stack = params[f"stack{gi}"]
+
+            def body(h, inp, _pattern=pattern):
+                lp, lc = inp
+                if stream is not None and stream.streams_params:
+                    lp = stream_layer_to_device(lp)
+                ncs = {}
+                for i, k in enumerate(_pattern):
+                    h, ncs[f"{k}_{i}"] = apply_layer_decode_slots(
+                        cfg, k, lp[f"{k}_{i}"], h, lc[f"{k}_{i}"],
+                        positions, active, ctx)
+                return h, ncs
+
+            x, nc = jax.lax.scan(body, x, (stack, caches[f"stack{gi}"]),
+                                 unroll=entry[2] if unroll else 1)
+            new_caches[f"stack{gi}"] = nc
+        else:
+            _, rem = entry
+            new_caches[f"rem{gi}"] = {}
+            for i, k in enumerate(rem):
+                key = f"layer{i}_{k}"
+                x, nc = apply_layer_decode_slots(
+                    cfg, k, params[f"rem{gi}"][key], x,
+                    caches[f"rem{gi}"][key], positions, active, ctx)
+                new_caches[f"rem{gi}"][key] = nc
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (serve engine: prompt processed in fixed-size chunks)
+# ---------------------------------------------------------------------------
+
+def apply_layer_prefill_chunk(cfg, kind, p, x, cache, start, length, ctx):
+    """One prompt chunk against an already-partially-populated cache.
+
+    x [B,C,d] holds tokens [start, start+C) (tail rows may be padding when
+    the prompt length is not a chunk multiple); `length` is the total valid
+    token count after this chunk. The chunk's keys land in the cache at
+    their absolute positions, then the chunk queries attend over the cache
+    with the causal + kv_len masks — per valid query row this is exactly the
+    full-prefill softmax (masked slots contribute exact zeros), so chunked
+    and whole-prompt prefill produce bitwise-equal logits. Gated to pure
+    "attn" stacks: ring (local_attn) and recurrent (ssd/rglru) caches have
+    no absolute-position write, so those families prefill in one chunk."""
+    if kind != "attn":
+        raise ValueError(
+            f"chunked prefill supports 'attn' layers only, got {kind!r}")
+    xi = constrain(x, "batch", "seq", None)
+    h = apply_norm(cfg, p.get("ln1", {}), xi)
+    q, k, v = project_qkv(cfg, p["attn"], h)
+    q, k = _rope_qk(cfg, q, k, ctx)
+    cache_axes = ("batch", "kv_seq", "kv_heads", None)
+    ck = jax.lax.dynamic_update_slice(
+        constrain(cache["k"], *cache_axes), k, (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        constrain(cache["v"], *cache_axes), v, (0, start, 0, 0))
+    ck = constrain(ck, *cache_axes)
+    cv = constrain(cv, *cache_axes)
+    o = attn_mod.naive_attention(q, ck, cv, causal=True, q_offset=start,
+                                 kv_len=length)
+    x2 = xi + out_proj(cfg, p["attn"], o)
+    x2, aux = _ffn(cfg, p, x2)
+    return x2, {"k": ck, "v": cv}, aux
+
+
+def apply_decoder_prefill_chunk(cfg, params, caches, x, start, length, ctx,
+                                unroll: bool = False, stream=None):
+    """-> (x, new_caches): one chunk of the prompt through every layer, the
+    cache threaded through the scan like decode (the chunk reads earlier
+    chunks' keys and appends its own)."""
+    new_caches = {}
+    for gi, entry in enumerate(stack_plan(cfg)):
+        if entry[0] == "scan":
+            _, pattern, _ = entry
+            stack = params[f"stack{gi}"]
+
+            def body(h, inp, _pattern=pattern):
+                lp, lc = inp
+                if stream is not None and stream.streams_params:
+                    lp = stream_layer_to_device(lp)
+                ncs = {}
+                for i, k in enumerate(_pattern):
+                    h, ncs[f"{k}_{i}"], _ = apply_layer_prefill_chunk(
+                        cfg, k, lp[f"{k}_{i}"], h, lc[f"{k}_{i}"],
+                        start, length, ctx)
+                return h, ncs
+
+            x, nc = jax.lax.scan(body, x, (stack, caches[f"stack{gi}"]),
+                                 unroll=entry[2] if unroll else 1)
+            new_caches[f"stack{gi}"] = nc
+        else:
+            _, rem = entry
+            new_caches[f"rem{gi}"] = {}
+            for i, k in enumerate(rem):
+                key = f"layer{i}_{k}"
+                x, nc, _ = apply_layer_prefill_chunk(
+                    cfg, k, params[f"rem{gi}"][key], x,
+                    caches[f"rem{gi}"][key], start, length, ctx)
+                new_caches[f"rem{gi}"][key] = nc
+    return x, new_caches
+
+
 def apply_decoder_decode(cfg, params, caches, x, pos, ctx,
                          unroll: bool = False, stream=None):
     """-> (x, new_caches). stream: SwapSchedule — host-resident params and/or

@@ -1,0 +1,16 @@
+"""Serving engine subsystem (DESIGN.md §7): a paged, host-spilling KV-cache
+pool (`kvpool`), a continuous-batching request scheduler (`scheduler`), and
+the engine that drives the fixed-shape slot-batched decode step (`engine`).
+`batching` holds the per-family synthetic batch helpers shared by the serve
+driver, the examples, and the tests."""
+from repro.serve.batching import (decode_step_batch, request_prompt_len,
+                                  static_batch_from_requests,
+                                  synth_prompt_batch, synth_requests)
+from repro.serve.engine import ServeEngine
+from repro.serve.kvpool import PagedKVPool
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["PagedKVPool", "Request", "Scheduler", "ServeEngine",
+           "decode_step_batch", "request_prompt_len",
+           "static_batch_from_requests", "synth_prompt_batch",
+           "synth_requests"]

@@ -1,0 +1,129 @@
+"""Per-family serve-batch synthesis — the ONE place that knows which input
+tensors each model family's prefill/decode steps take. Previously the
+lm/vlm/audio blocks were duplicated between serve.py's prefill setup and its
+decode loop; the serve driver, the engine, the examples, and the tests all
+share these helpers now."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def synth_prompt_batch(cfg, batch_size: int, prompt_len: int,
+                       rng: np.random.Generator) -> Dict:
+    """Synthetic whole-batch prompt inputs for `Model.prefill` (the static
+    serving loop and the benchmarks)."""
+    b = batch_size
+    if cfg.family == "vlm":
+        return {"embeds": jnp.asarray(
+            rng.standard_normal((b, prompt_len, cfg.d_model)) * 0.02,
+            jnp.bfloat16),
+            "positions3": jnp.tile(jnp.arange(prompt_len)[None, None],
+                                   (3, b, 1))}
+    if cfg.family == "audio":
+        return {"enc_embeds": jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            jnp.bfloat16),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, prompt_len)), jnp.int32)}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, prompt_len)), jnp.int32)}
+
+
+def decode_step_batch(cfg, toks, positions) -> Dict:
+    """One-token decode-step inputs. toks [B,1] int32 (ignored by vlm);
+    positions [B] int32 per-slot positions — a whole-batch loop passes a
+    constant vector, the slot engine passes each slot's own position."""
+    if cfg.family == "vlm":
+        b = toks.shape[0]
+        positions3 = jnp.tile(jnp.asarray(positions, jnp.int32)[None, :, None],
+                              (3, 1, 1))
+        return {"embeds": jnp.zeros((b, 1, cfg.d_model), jnp.bfloat16),
+                "positions3": positions3}
+    return {"tokens": toks}
+
+
+def request_prompt_len(cfg, req) -> int:
+    """Prompt length of one request (vlm prompts are embeds, not tokens)."""
+    if cfg.family == "vlm":
+        return int(req.extras["embeds"].shape[1])
+    return int(len(req.prompt))
+
+
+def request_prefill_batch(cfg, req, lo: int = 0,
+                          hi: Optional[int] = None,
+                          pad_to: Optional[int] = None) -> Dict:
+    """B=1 prefill inputs for one request's prompt slice [lo, hi), right-
+    padded to `pad_to` (chunked prefill needs a fixed chunk shape; the pad
+    rows are masked/overwritten downstream — see apply_layer_prefill_chunk).
+    """
+    plen = request_prompt_len(cfg, req)
+    hi = plen if hi is None else hi
+    n = hi - lo
+    width = pad_to or n
+    if cfg.family == "vlm":
+        emb = np.asarray(req.extras["embeds"][:, lo:hi])
+        if width > n:
+            emb = np.pad(emb, ((0, 0), (0, width - n), (0, 0)))
+        pos3 = np.asarray(req.extras["positions3"][:, :, lo:hi])
+        if width > n:
+            pos3 = np.pad(pos3, ((0, 0), (0, 0), (0, width - n)),
+                          mode="edge")
+        return {"embeds": jnp.asarray(emb, jnp.bfloat16),
+                "positions3": jnp.asarray(pos3, jnp.int32)}
+    toks = np.asarray(req.prompt[lo:hi], np.int32)
+    if width > n:
+        toks = np.pad(toks, (0, width - n))
+    batch = {"tokens": jnp.asarray(toks[None], jnp.int32)}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jnp.asarray(req.extras["enc_embeds"],
+                                          jnp.bfloat16)
+    return batch
+
+
+def static_batch_from_requests(cfg, reqs) -> Dict:
+    """Whole-batch prefill inputs covering the SAME prompts as a request
+    list — the static-baseline side of the engine-vs-static parity tests
+    and benchmarks."""
+    if cfg.family == "vlm":
+        return {"embeds": jnp.asarray(
+            np.concatenate([r.extras["embeds"] for r in reqs]), jnp.bfloat16),
+            "positions3": jnp.asarray(np.concatenate(
+                [r.extras["positions3"] for r in reqs], axis=1), jnp.int32)}
+    batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]),
+                                   jnp.int32)}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jnp.asarray(np.concatenate(
+            [r.extras["enc_embeds"] for r in reqs]), jnp.bfloat16)
+    return batch
+
+
+def synth_requests(cfg, n: int, prompt_len: int, max_new: int,
+                   rng: np.random.Generator, *,
+                   temperature: Optional[float] = None,
+                   top_k: Optional[int] = None) -> List:
+    """n synthetic requests with family-appropriate prompts — the request
+    trace the driver, the benchmarks, and the parity tests all serve."""
+    from repro.serve.scheduler import Request
+    reqs = []
+    for i in range(n):
+        extras = {}
+        prompt = np.zeros((0,), np.int32)
+        if cfg.family == "vlm":
+            extras["embeds"] = (rng.standard_normal(
+                (1, prompt_len, cfg.d_model)) * 0.02).astype(np.float32)
+            extras["positions3"] = np.tile(
+                np.arange(prompt_len, dtype=np.int32)[None, None], (3, 1, 1))
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, (prompt_len,),
+                                  dtype=np.int32)
+            if cfg.family == "audio":
+                extras["enc_embeds"] = (rng.standard_normal(
+                    (1, cfg.encoder_seq, cfg.d_model)) * 0.02
+                ).astype(np.float32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=max_new,
+                            temperature=temperature, top_k=top_k,
+                            extras=extras))
+    return reqs

@@ -1,0 +1,296 @@
+"""Continuous-batching serve engine (DESIGN.md §7).
+
+One fixed-shape slot-batched decode step (`build_slot_decode_step`) serves
+every tick: finished requests are evicted and queued ones join by mutating
+the donated cache (via the paged pool) and the positions/active vectors —
+the compiled computation never changes, so join/evict churn costs zero
+recompilation. Prompts run through CHUNKED prefill (fixed chunk shape, one
+compile) on pure-attention stacks, whole-prompt prefill otherwise; the
+paged pool spills prefilled-but-waiting requests to the host arena and
+double-buffers their return (prefetch staged against the decode tick).
+
+Greedy outputs are token-identical to a static whole-batch loop: the slot
+decode math is row-independent and chunked prefill is bitwise-equal to
+whole-prompt prefill (tests/test_serve_engine.py holds both through churn).
+
+Token selection is host-side: greedy argmax, or temperature/top-k sampling
+with a per-REQUEST deterministic rng (seeded by (engine seed, rid)), so a
+request's samples do not depend on which slots it happened to share ticks
+with."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ShapeConfig
+from repro.core.lms.planner import MemoryPlan
+from repro.models.model import Model
+from repro.serve.batching import (decode_step_batch, request_prefill_batch,
+                                  request_prompt_len)
+from repro.serve.kvpool import PagedKVPool
+from repro.serve.scheduler import Request, Scheduler
+from repro.train.steps import build_slot_decode_step
+
+
+class ServeEngine:
+    def __init__(self, model: Model, mesh, *, slots: int, max_len: int,
+                 plan: Optional[MemoryPlan] = None, page_size: int = 16,
+                 device_pages: Optional[int] = None,
+                 host_pages: Optional[int] = None, prefill_chunk: int = 0,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 eos_id: Optional[int] = None, params=None):
+        cfg = model.cfg
+        self.model, self.cfg, self.mesh = model, cfg, mesh
+        self.slots, self.max_len = slots, max_len
+        self.temperature, self.top_k = temperature, top_k
+        self.seed, self.eos_id = seed, eos_id
+
+        shape = ShapeConfig("serve_slots", "decode", max_len, slots)
+        (self._decode_fn, params_sh, _,
+         cache_sh) = build_slot_decode_step(model, shape, mesh, plan=plan,
+                                            donate=True)
+        paging = plan.kv_paging if plan is not None else None
+        if paging is not None:
+            page_size = paging.page_size
+            device_pages = (paging.device_pages if device_pages is None
+                            else device_pages)
+            host_pages = (paging.host_pages if host_pages is None
+                          else host_pages)
+        # the page grid must tile the cache exactly (see PagedKVPool):
+        # snap a non-dividing request down to the largest page size that does
+        page_size = math.gcd(max_len, page_size)
+        full = slots * max(-(-max_len // page_size), 1)
+        device_pages = full if device_pages is None else device_pages
+        host_pages = 2 * full if host_pages is None else host_pages
+        # state-arena depth comes from the plan's priced backlog when there
+        # is one (host_pages alone cannot size it for page-free families)
+        host_slots = (paging.host_slots if paging is not None
+                      and paging.host_slots else 2 * slots)
+        self.pool = PagedKVPool(model, slots=slots, max_len=max_len,
+                                page_size=page_size,
+                                device_pages=device_pages,
+                                host_pages=host_pages,
+                                host_slots=host_slots,
+                                cache_sharding=cache_sh)
+        self.params = (jax.device_put(model.init(jax.random.key(seed)),
+                                      params_sh)
+                       if params is None else params)
+
+        # chunked prefill needs absolute-position cache writes — gate to
+        # pure-attention stacks; other families prefill the whole prompt.
+        # A chunk can never be wider than the cache it writes into.
+        self._chunk = (min(prefill_chunk, max_len)
+                       if prefill_chunk > 0
+                       and all(k == "attn" for k in cfg.layer_kinds())
+                       else 0)
+        if self._chunk:
+            self._scratch = model.init_cache(1, max_len)
+            self._chunk_fn = jax.jit(model.prefill_chunk, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=max_len))
+
+        self.scheduler = Scheduler(slots)
+        self._rngs: Dict[int, np.random.Generator] = {}
+        self._ticks = 0
+        self._decode_tokens = 0
+        self._decode_s = 0.0
+
+    # ---- token selection --------------------------------------------------
+    def _select(self, req: Request, row: np.ndarray) -> int:
+        t = self.temperature if req.temperature is None else req.temperature
+        k = self.top_k if req.top_k is None else req.top_k
+        if t <= 0:
+            return int(np.argmax(row))
+        logp = row.astype(np.float64) / t
+        if k and k < logp.size:
+            idx = np.argpartition(logp, -k)[-k:]
+        else:
+            idx = np.arange(logp.size)
+        p = np.exp(logp[idx] - logp[idx].max())
+        rng = self._rngs.setdefault(
+            req.rid, np.random.default_rng((self.seed, req.rid)))
+        return int(rng.choice(idx, p=p / p.sum()))
+
+    # ---- prefill ----------------------------------------------------------
+    def _prefill(self, req: Request):
+        """-> (B=1 cache tree holding the prompt's keys, last-prompt-token
+        logits row). Chunked on attention stacks (fixed chunk shape: one
+        compile serves every prompt), whole-prompt otherwise."""
+        plen = request_prompt_len(self.cfg, req)
+        if self._chunk:
+            c = self._chunk
+            row = None
+            for lo in range(0, plen, c):
+                hi = min(lo + c, plen)
+                batch = request_prefill_batch(self.cfg, req, lo, hi, pad_to=c)
+                logits, self._scratch = self._chunk_fn(
+                    self.params, self._scratch, batch, jnp.int32(lo),
+                    jnp.int32(hi))
+                if hi == plen:
+                    row = np.asarray(logits[0, plen - 1 - lo])
+            return self._scratch, row
+        batch = request_prefill_batch(self.cfg, req)
+        logits, cache = self._prefill_fn(self.params, batch)
+        return cache, np.asarray(logits[0])
+
+    def _first_token(self, req: Request, row: np.ndarray, t0: float) -> None:
+        req.tokens.append(self._select(req, row))
+        req.prefilled = True
+        # TTFT is relative to the request's own arrival when the trace
+        # carries one (a streaming workload), else to trace start
+        req.ttft_s = time.monotonic() - (req.arrival or t0)
+
+    def _done(self, req: Request) -> bool:
+        return (len(req.tokens) >= req.max_new
+                or (self.eos_id is not None and req.tokens
+                    and req.tokens[-1] == self.eos_id))
+
+    # ---- scheduling -------------------------------------------------------
+    def _reserve_need(self, req: Request) -> int:
+        total = request_prompt_len(self.cfg, req) + req.max_new
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={total} exceeds the "
+                f"engine's max_len={self.max_len}")
+        return self.pool.pages_needed(total)
+
+    def _admit(self, t0: float) -> bool:
+        """Two-phase admission (see scheduler.py): FIFO slot joins under the
+        device page budget, then prefill-ahead spills into the host arena.
+        -> True if anything progressed."""
+        pool, sched = self.pool, self.scheduler
+        progressed = False
+        while sched.queue:
+            head = sched.queue[0]
+            need = self._reserve_need(head)
+            if need > pool.device_pages:
+                raise RuntimeError(
+                    f"request {head.rid} needs {need} pages but the device "
+                    f"budget is {pool.device_pages}: unservable")
+            slot = sched.free_slot()
+            staged = pool.status(head.rid) in ("staged",)
+            if slot is None or not (staged or pool.can_reserve(need)):
+                break
+            sched.queue.popleft()
+            if head.prefilled:
+                pool.attach(head.rid, slot)          # return from the spill
+            else:
+                cache1, row = self._prefill(head)
+                self._first_token(head, row, t0)
+                if self._done(head):
+                    # max_new=1 / eos on the prefill token: finished without
+                    # ever needing a slot or pages
+                    sched.finished.append(head)
+                    progressed = True
+                    continue
+                pool.attach_fresh(head.rid, slot, cache1,
+                                  request_prompt_len(self.cfg, head), need)
+            sched.activate(head, slot)
+            progressed = True
+        # prefill-ahead: process waiting prompts into the host arena so
+        # their pages are ready the moment a slot frees
+        for req in list(sched.queue):
+            if req.prefilled:
+                continue
+            plen = request_prompt_len(self.cfg, req)
+            if not pool.can_spill(pool.pages_needed(plen)):
+                break
+            cache1, row = self._prefill(req)
+            self._first_token(req, row, t0)
+            if self._done(req):
+                sched.queue.remove(req)
+                sched.finished.append(req)
+                progressed = True
+                continue
+            pool.spill(req.rid, cache1, plen, self._reserve_need(req))
+            progressed = True
+        return progressed
+
+    def _prefetch_next(self) -> None:
+        """Double buffer: stage the next waiting request's spilled pages
+        back toward the device while the decode tick computes."""
+        for req in self.scheduler.queue:
+            if self.pool.status(req.rid) == "host":
+                self.pool.prefetch(req.rid)
+                return
+
+    # ---- decode -----------------------------------------------------------
+    def _tick(self) -> None:
+        active = self.scheduler.active
+        b = self.slots
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        act = np.zeros((b,), bool)
+        for s, r in active.items():
+            toks[s, 0] = r.tokens[-1]
+            pos[s] = request_prompt_len(self.cfg, r) + len(r.tokens) - 1
+            act[s] = True
+        posd = jnp.asarray(pos)
+        batch = decode_step_batch(self.cfg, jnp.asarray(toks), posd)
+        t0 = time.monotonic()
+        logits, self.pool.cache = self._decode_fn(
+            self.params, self.pool.cache, batch, posd, jnp.asarray(act))
+        rows = np.asarray(logits)
+        self._decode_s += time.monotonic() - t0
+        released = False
+        for s, r in active.items():
+            tok = self._select(r, rows[s])
+            r.tokens.append(tok)
+            if self._done(r):
+                self.scheduler.finish(s)
+                self.pool.release(r.rid)
+                released = True
+        if released:
+            # a release is the budget headroom the double buffer needs:
+            # stage the next waiting request NOW so its host->device copy
+            # runs during token selection / batch build and the coming
+            # _admit attaches from the staged block instead of the arena
+            self._prefetch_next()
+        self._ticks += 1
+        self._decode_tokens += len(active)
+
+    # ---- driver -----------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+        """Serve a request trace to completion; -> {rid: generated token
+        ids}. Per-request TTFT and engine throughput land in `metrics()`."""
+        t0 = time.monotonic()
+        for r in requests:
+            r.arrival = r.arrival or t0
+            self.scheduler.submit(r)
+        while self.scheduler.has_work():
+            progressed = self._admit(t0)
+            if not self.scheduler.active:
+                if not progressed:
+                    raise RuntimeError(
+                        "serving stalled: queue non-empty but nothing "
+                        "admits (host arena too small for one request?)")
+                continue
+            self._prefetch_next()
+            self._tick()
+        self._wall_s = time.monotonic() - t0
+        return {r.rid: np.asarray(r.tokens, np.int32)
+                for r in self.scheduler.finished}
+
+    def metrics(self) -> Dict[str, float]:
+        fin = self.scheduler.finished
+        out = {
+            "requests": float(len(fin)),
+            "ticks": float(self._ticks),
+            "decode_tokens": float(self._decode_tokens),
+            "decode_tok_s": (self._decode_tokens / self._decode_s
+                             if self._decode_s else 0.0),
+            "mean_concurrency": (self._decode_tokens / self._ticks
+                                 if self._ticks else 0.0),
+            "wall_s": getattr(self, "_wall_s", 0.0),
+        }
+        if fin:
+            tt = [r.ttft_s for r in fin if r.ttft_s is not None]
+            out["ttft_mean_s"] = float(np.mean(tt)) if tt else 0.0
+            out["ttft_p95_s"] = (float(np.percentile(tt, 95)) if tt else 0.0)
+        out.update({f"pool_{k}": float(v) for k, v in self.pool.stats.items()})
+        return out

@@ -1,0 +1,319 @@
+"""Paged, host-spilling KV-cache pool — the SERVING-side executor of the
+planner's `kvcache` residency class (DESIGN.md §7).
+
+The pool owns two arenas:
+
+* the **device arena** is the slot-batched decode cache itself (the pytree
+  `build_slot_decode_step` threads): `slots` rows of `max_len` positions.
+  A *page* is `page_size` consecutive token-positions of the WHOLE layer
+  stack for one slot, so slot `b`'s page `p` is the region
+  ``leaf[..., b, p*ps:(p+1)*ps, ...]`` of every paged leaf.
+* the **host arena** is a `[host_pages, ...page]` buffer per paged leaf in
+  pinned host memory (`effective_kind` degrades it to ordinary memory on
+  single-memory-space platforms) holding the pages of requests that have
+  been prefilled but are still waiting for a decode slot, plus a
+  `[host_slots, ...]` buffer per seq-independent *state* leaf (recurrent
+  ssd/rglru state, local-attention rings, encoder cross KV).
+
+Leaves page along the sequence axis iff they are full-history attention
+k/v (leaf key "k"/"v" with the cache-capacity sequence dim); everything
+else moves wholesale as per-slot state.
+
+Lifecycle: ``spill`` writes a prefilled request's content pages out to the
+host arena; ``prefetch`` stages them back into device memory while decode
+ticks run (the double buffer — the copy overlaps compute, and ``attach``
+then consumes the staged block without waiting); ``attach`` packs the pages
+into a freed slot's rows; ``release`` returns a finished request's page
+reservation. Admission arithmetic: a request RESERVES
+``pages_needed(prompt + max_new)`` device pages up front (no mid-decode
+preemption); spill only moves the ``ceil(prompt/page_size)`` content pages
+that actually hold keys — the gap grows as the request decodes into its
+reservation.
+
+The pool tracks the device budget in *pages* (`device_pages`, priced by
+`price_kv_paging`); `resident_pages + staged_pages <= device_pages` is the
+invariant `can_reserve` enforces for the engine's admission control."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+
+from repro import compat
+from repro.core.lms.offload import DEVICE, HOST, effective_kind
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(getattr(e, "key", str(e)) for e in path)
+
+
+@dataclass(frozen=True)
+class _LeafInfo:
+    keys: Tuple[str, ...]       # dict path into the cache tree
+    stacked: bool               # leading ("layers",) axis present
+    batch_axis: int             # 1 if stacked else 0
+    paged: bool                 # pages along the seq axis (attn k/v)
+
+
+@dataclass
+class _Entry:
+    reserve_pages: int          # device pages reserved at admission
+    content_pages: int          # pages actually holding prefilled keys
+    length: int                 # valid prompt tokens
+    where: str                  # "host" | "staged" | "dev"
+    host_ids: Optional[np.ndarray] = None
+    host_state_id: Optional[int] = None
+    slot: Optional[int] = None
+    staged: Dict[Tuple[str, ...], jax.Array] = field(default_factory=dict)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter(arena, ids, pages):
+    return arena.at[ids].set(pages)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("axis",))
+def _write_block(cache_leaf, block, slot, *, axis):
+    """In-place (donated) write of one slot's block; `block` already carries
+    a singleton batch axis at `axis` so ranks line up."""
+    starts = [0] * cache_leaf.ndim
+    starts[axis] = slot
+    return jax.lax.dynamic_update_slice(cache_leaf, block, tuple(starts))
+
+
+class PagedKVPool:
+    def __init__(self, model, *, slots: int, max_len: int, page_size: int,
+                 device_pages: int, host_pages: int,
+                 host_slots: Optional[int] = None, cache_sharding=None):
+        cfg = model.cfg
+        if max_len % page_size:
+            raise ValueError(
+                f"page_size={page_size} must divide max_len={max_len}: a "
+                "ragged tail page would make spill's page reshape and "
+                "attach's contiguous write disagree about the content width")
+        self.slots, self.max_len, self.page_size = slots, max_len, page_size
+        self.device_pages = device_pages
+        self.cache = model.init_cache(slots, max_len)
+        if cache_sharding is not None:
+            self.cache = jax.device_put(self.cache, cache_sharding)
+        host_slots = host_slots if host_slots is not None else max(
+            host_pages // max(-(-max_len // page_size), 1), 1)
+
+        self._info: Dict[Tuple[str, ...], _LeafInfo] = {}
+        self._host: Dict[Tuple[str, ...], jax.Array] = {}
+        hk = effective_kind(HOST)
+        flat, _ = jtu.tree_flatten_with_path(self.cache)
+        for path, leaf in flat:
+            keys = _path_keys(path)
+            stacked = keys[0].startswith("stack")
+            ba = 1 if stacked else 0
+            paged = (keys[-1] in ("k", "v")
+                     and leaf.ndim > ba + 1 and leaf.shape[ba + 1] == max_len)
+            self._info[keys] = _LeafInfo(keys, stacked, ba, paged)
+            rest = leaf.shape[ba + 1:]
+            lead = leaf.shape[:ba]           # (L,) when stacked
+            if paged:
+                shape = (host_pages,) + lead + (page_size,) + rest[1:]
+            else:
+                shape = (host_slots,) + lead + rest
+            self._host[keys] = compat.to_memory_kind(
+                jnp.zeros(shape, leaf.dtype), hk)
+
+        self._free_host_pages: List[int] = list(range(host_pages))
+        self._free_host_slots: List[int] = list(range(host_slots))
+        self._table: Dict[int, _Entry] = {}
+        self._resident = 0          # reserved device pages (active slots)
+        self._staged = 0            # prefetched pages counted against budget
+        self.stats = {"spilled_pages": 0, "fetched_pages": 0,
+                      "prefetched_pages": 0, "direct_pages": 0,
+                      "peak_resident_pages": 0, "spilled_requests": 0}
+
+    # ---- admission arithmetic --------------------------------------------
+    def pages_needed(self, total_len: int) -> int:
+        if not any(i.paged for i in self._info.values()):
+            return 0
+        return -(-min(total_len, self.max_len) // self.page_size)
+
+    @property
+    def resident_pages(self) -> int:
+        return self._resident
+
+    def can_reserve(self, n_pages: int) -> bool:
+        return self._resident + self._staged + n_pages <= self.device_pages
+
+    def can_spill(self, content_pages: int) -> bool:
+        return (len(self._free_host_pages) >= content_pages
+                and len(self._free_host_slots) >= 1)
+
+    def status(self, rid: int) -> Optional[str]:
+        """"host" | "staged" | "dev" | None (not pooled)."""
+        e = self._table.get(rid)
+        return e.where if e is not None else None
+
+    # ---- page extraction / assembly --------------------------------------
+    def _content_block(self, leaf, info: _LeafInfo, width: int):
+        """[*lead, width, *rest] content region of a B=1 request cache leaf
+        (paged leaves), or [*lead, *rest] whole state (state leaves)."""
+        if info.paged:
+            return leaf[:, 0, :width] if info.stacked else leaf[0, :width]
+        return leaf[:, 0] if info.stacked else leaf[0]
+
+    def _to_pages(self, block, info: _LeafInfo, n: int):
+        """[*lead, n*ps, *rest] -> [n, *lead, ps, *rest]."""
+        ps = self.page_size
+        if info.stacked:
+            L = block.shape[0]
+            return jnp.moveaxis(
+                block.reshape((L, n, ps) + block.shape[2:]), 1, 0)
+        return block.reshape((n, ps) + block.shape[1:])
+
+    def _from_pages(self, pages, info: _LeafInfo):
+        """[n, *lead, ps, *rest] -> [*lead, n*ps, *rest]."""
+        if info.stacked:
+            n, L, ps = pages.shape[:3]
+            return jnp.moveaxis(pages, 0, 1).reshape(
+                (L, n * ps) + pages.shape[3:])
+        n, ps = pages.shape[:2]
+        return pages.reshape((n * ps,) + pages.shape[2:])
+
+    def _write_slot(self, keys, block, slot: int):
+        """Write one leaf's block into the device arena at `slot` (donated
+        in-place update; the cache dict entry is swapped for the new
+        buffer)."""
+        info = self._info[keys]
+        block = block[(slice(None),) * info.batch_axis + (None,)]
+        node = self.cache
+        for k in keys[:-1]:
+            node = node[k]
+        node[keys[-1]] = _write_block(node[keys[-1]], block,
+                                      jnp.int32(slot), axis=info.batch_axis)
+
+    # ---- lifecycle --------------------------------------------------------
+    def spill(self, rid: int, req_cache, length: int,
+              reserve_pages: int) -> None:
+        """Write a prefilled request's content pages + state out to the host
+        arena (the cold path a request takes when no slot admits it yet)."""
+        n = self.pages_needed(length)
+        assert self.can_spill(n), f"host arena full (need {n} pages)"
+        assert rid not in self._table, f"request {rid} already pooled"
+        ids = np.asarray([self._free_host_pages.pop()
+                          for _ in range(n)], np.int32)
+        sid = self._free_host_slots.pop()
+        hk = effective_kind(HOST)
+        flat, _ = jtu.tree_flatten_with_path(req_cache)
+        for path, leaf in flat:
+            keys = _path_keys(path)
+            info = self._info[keys]
+            if info.paged:
+                if n == 0:
+                    continue
+                pages = self._to_pages(
+                    self._content_block(leaf, info, n * self.page_size),
+                    info, n)
+                self._host[keys] = _scatter(
+                    self._host[keys], jnp.asarray(ids),
+                    compat.to_memory_kind(pages, hk))
+            else:
+                state = self._content_block(leaf, info, 0)
+                self._host[keys] = _scatter(
+                    self._host[keys], jnp.asarray([sid], jnp.int32),
+                    compat.to_memory_kind(state[None], hk))
+        self._table[rid] = _Entry(reserve_pages, n, length, "host",
+                                  host_ids=ids, host_state_id=sid)
+        self.stats["spilled_pages"] += int(n)
+        self.stats["spilled_requests"] += 1
+
+    def prefetch(self, rid: int) -> bool:
+        """Stage a spilled request's pages back into device memory ahead of
+        its slot attach — the double buffer: issued before the decode tick's
+        dispatch, the copies overlap the tick's compute, and the later
+        attach consumes the staged blocks without waiting. Staged pages
+        count against the device budget. No-op unless the request is
+        host-resident and the budget admits it."""
+        e = self._table.get(rid)
+        if e is None or e.where != "host":
+            return False
+        # the FULL reservation is claimed at prefetch time so the later
+        # attach can never find the budget stolen from under a staged
+        # request
+        if not self.can_reserve(e.reserve_pages):
+            return False
+        dk = effective_kind(DEVICE)
+        for keys, info in self._info.items():
+            if info.paged:
+                if e.content_pages == 0:
+                    continue
+                gathered = self._host[keys][jnp.asarray(e.host_ids)]
+            else:
+                gathered = self._host[keys][e.host_state_id]
+            e.staged[keys] = compat.to_memory_kind(gathered, dk)
+        self._staged += e.reserve_pages
+        e.where = "staged"
+        self.stats["prefetched_pages"] += int(e.content_pages)
+        return True
+
+    def attach(self, rid: int, slot: int) -> None:
+        """Pack a spilled (or staged) request's pages into a free slot's
+        rows of the device arena and hand its host pages back."""
+        e = self._table[rid]
+        assert e.where in ("host", "staged"), e.where
+        # a staged request's full reservation already sits in _staged
+        free = 0 if e.where == "staged" else e.reserve_pages
+        assert self._resident + self._staged + free <= self.device_pages, \
+            "attach past the device page budget — admission check missing"
+        for keys, info in self._info.items():
+            if info.paged and e.content_pages == 0:
+                continue
+            if e.where == "staged":
+                src = e.staged[keys]
+            elif info.paged:
+                src = self._host[keys][jnp.asarray(e.host_ids)]
+            else:
+                src = self._host[keys][e.host_state_id]
+            block = self._from_pages(src, info) if info.paged else src
+            self._write_slot(keys, block, slot)
+        if e.where == "staged":
+            self._staged -= e.reserve_pages
+        else:
+            self.stats["fetched_pages"] += int(e.content_pages)
+        self._free_host_pages.extend(int(i) for i in e.host_ids)
+        self._free_host_slots.append(e.host_state_id)
+        e.host_ids, e.host_state_id, e.staged = None, None, {}
+        e.where, e.slot = "dev", slot
+        self._resident += e.reserve_pages
+        self.stats["peak_resident_pages"] = max(
+            self.stats["peak_resident_pages"], self._resident)
+
+    def attach_fresh(self, rid: int, slot: int, req_cache, length: int,
+                     reserve_pages: int) -> None:
+        """Hot path: a slot was free at admission, so the prefilled pages go
+        straight from the prefill output into the slot — no host hop."""
+        assert rid not in self._table, f"request {rid} already pooled"
+        n = self.pages_needed(length)
+        assert self.can_reserve(reserve_pages), "admission check missing"
+        flat, _ = jtu.tree_flatten_with_path(req_cache)
+        for path, leaf in flat:
+            keys = _path_keys(path)
+            info = self._info[keys]
+            if info.paged and n == 0:
+                continue
+            width = n * self.page_size
+            block = self._content_block(leaf, info, width)
+            self._write_slot(keys, block, slot)
+        self._table[rid] = _Entry(reserve_pages, n, length, "dev", slot=slot)
+        self._resident += reserve_pages
+        self.stats["direct_pages"] += int(n)
+        self.stats["peak_resident_pages"] = max(
+            self.stats["peak_resident_pages"], self._resident)
+
+    def release(self, rid: int) -> None:
+        """Return a finished request's device-page reservation."""
+        e = self._table.pop(rid)
+        assert e.where == "dev", f"release of non-resident request: {e.where}"
+        self._resident -= e.reserve_pages

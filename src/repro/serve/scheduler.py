@@ -1,0 +1,75 @@
+"""Continuous-batching request scheduler: a FIFO admission queue over a
+fixed set of decode slots.
+
+Admission is two-phase, both gated by the planner-priced page budget the
+pool enforces (DESIGN.md §7):
+
+  1. *prefill admission* — a queued request may prefill early and have its
+     pages SPILLED to the host arena whenever host pages are free, so
+     prompt processing runs ahead of slot availability;
+  2. *slot admission* — the head of the queue joins a free decode slot only
+     when the pool can reserve its FULL page need (prompt + max_new tokens,
+     rounded up to pages) against the device page budget. Reservation up
+     front means an admitted request can never be preempted mid-decode by
+     its own cache growth.
+
+The scheduler is pure bookkeeping (queue/slots/active); the byte-level
+admission checks live in the pool, and the engine ties the two together."""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # int32 [P] (empty for vlm)
+    max_new: int
+    temperature: Optional[float] = None  # None -> engine default; 0 = greedy
+    top_k: Optional[int] = None
+    extras: Dict = field(default_factory=dict)  # vlm embeds / audio enc_embeds
+    arrival: float = 0.0
+
+    # engine-managed state
+    prefilled: bool = False
+    tokens: List[int] = field(default_factory=list)   # generated so far
+    ttft_s: Optional[float] = None
+
+
+class Scheduler:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    @property
+    def active(self) -> Dict[int, Request]:
+        return {i: r for i, r in enumerate(self.slots) if r is not None}
+
+    def activate(self, req: Request, slot: int) -> None:
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        self.slots[slot] = req
+
+    def finish(self, slot: int) -> Request:
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} empty"
+        self.slots[slot] = None
+        self.finished.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

@@ -44,7 +44,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.config.base import TrainConfig
+from repro.config.base import ShapeConfig, TrainConfig
 from repro.core.ddl.allreduce import (ddl_reduce_tree,
                                       hierarchical_reduce_scatter_flat,
                                       pack, pack_spec, unpack, PackSpec)
@@ -712,7 +712,13 @@ def init_zero1_state(model: Model, tcfg: TrainConfig, rng, data_size: int):
 # Serving steps
 # ---------------------------------------------------------------------------
 
-def build_prefill_step(model: Model, shape, mesh, plan=None):
+def build_prefill_step(model: Model, shape, mesh, plan=None,
+                       cache_len: Optional[int] = None):
+    """cache_len: capacity of the emitted cache (>= shape.seq_len). Serving
+    prefills into a decode-sized cache (prompt_len tokens, prompt+gen slots)
+    — passing it here keeps the jitted prefill the ONE prefill path instead
+    of every caller re-jitting its own."""
+    cache_len = cache_len or shape.seq_len
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
@@ -722,7 +728,9 @@ def build_prefill_step(model: Model, shape, mesh, plan=None):
     _, bshards = model.input_specs(shape, mesh)
     bshards = {k: v for k, v in bshards.items() if k not in ("pos", "labels")}
     batch_sh = compat.tree.map(lambda s: NamedSharding(mesh, s), bshards)
-    _, cspecs = model.cache_abstract(shape, mesh)
+    cache_shape = ShapeConfig(shape.name, shape.kind, cache_len,
+                              shape.global_batch)
+    _, cspecs = model.cache_abstract(cache_shape, mesh)
     k_kind = effective_kind("pinned_host") if residency.get("kvcache") == "host" else None
     cache_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s, memory_kind=k_kind) if k_kind
@@ -732,7 +740,7 @@ def build_prefill_step(model: Model, shape, mesh, plan=None):
 
     def prefill(params, batch):
         with sharding_env(mesh):
-            return model.prefill(params, batch, cache_len=shape.seq_len,
+            return model.prefill(params, batch, cache_len=cache_len,
                                  stream=stream)
 
     fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
@@ -765,6 +773,57 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
 
     fn = jax.jit(decode,
                  in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),
+                 out_shardings=(NamedSharding(mesh, P()), cache_sh),
+                 donate_argnums=(1,) if donate else ())
+    return fn, params_sh, batch_sh, cache_sh
+
+
+def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
+                           rules=None):
+    """Fixed-shape slot-batched decode step for the continuous-batching
+    serve engine: `shape.global_batch` is the SLOT count, `shape.seq_len`
+    the per-slot cache capacity. Each call advances every active slot one
+    token at its own position — finished requests are evicted and new ones
+    join by mutating the (donated) cache and the positions/active vectors,
+    never the compiled computation, so join/evict churn costs zero
+    recompilation.
+
+    -> (fn(params, cache, batch, positions, active) -> (logits [B,V],
+    new_cache), params_sh, batch_sh, cache_sh). positions [B] int32 per-slot
+    decode positions; active [B] bool slot-occupancy mask (inactive rows
+    compute garbage but their cache rows are held byte-stable)."""
+    _, pspecs = model.abstract_params(mesh)
+    residency = (plan.residency if plan else {})
+    p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
+    params_sh = compat.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind=p_kind) if p_kind
+        else NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    _, bshards = model.input_specs(shape, mesh)
+    batch_sh = {k: NamedSharding(mesh, v) for k, v in bshards.items()
+                if k != "pos"}
+    # positions/active are per-slot vectors: sharded exactly like the batch
+    # rows they describe
+    slot_spec = bshards.get("tokens", next(iter(bshards.values())))
+    slot_sh = NamedSharding(mesh, P(*tuple(slot_spec)[:1]))
+    # the serve engine owns KV residency via the paged pool: the decode
+    # cache (= the pool's device arena) is always device-resident here,
+    # whatever the plan says about the kvcache CLASS (which covers the
+    # spilled backlog, not the active working set)
+    _, cspecs = model.cache_abstract(shape, mesh, rules=rules)
+    cache_sh = compat.tree.map(
+        lambda s: NamedSharding(mesh, s), cspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    stream = _serving_stream(plan)
+
+    def decode(params, cache, batch, positions, active):
+        with sharding_env(mesh, rules=rules):
+            return model.decode_slots(params, cache, batch, positions,
+                                      active, stream=stream)
+
+    fn = jax.jit(decode,
+                 in_shardings=(params_sh, cache_sh, batch_sh, slot_sh,
+                               slot_sh),
                  out_shardings=(NamedSharding(mesh, P()), cache_sh),
                  donate_argnums=(1,) if donate else ())
     return fn, params_sh, batch_sh, cache_sh

@@ -1,0 +1,284 @@
+"""Serving engine (DESIGN.md §7): greedy token parity between the
+continuous-batching engine and the static whole-batch loop through
+join/evict churn with real page spill/return, paged-pool round trips,
+chunked-prefill exactness, sampling determinism, and the serve-plan
+schedule invariant."""
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro import compat
+from repro import hw as hwlib
+from repro.config.base import LMSConfig, MeshSpec, ShapeConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.lms.planner import (check_schedule_invariant,
+                                    plan_serve_memory, price_kv_paging)
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import run_static
+from repro.models.model import Model
+from repro.serve import PagedKVPool, ServeEngine, synth_requests
+from repro.train.steps import build_prefill_step, build_slot_decode_step
+
+N_REQ, PROMPT, GEN = 5, 8, 8
+TOTAL = PROMPT + GEN          # page grid must tile the cache: PAGE | TOTAL
+SLOTS, PAGE, CHUNK = 2, 4, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b")
+    mesh = make_mesh(MeshSpec((1, 1), ("data", "model")))
+    model = Model(cfg, attn_impl="naive")
+    rng = np.random.default_rng(7)
+    reqs = synth_requests(cfg, N_REQ, PROMPT, GEN, rng)
+    params, static_toks, _ = run_static(model, mesh, reqs, PROMPT, GEN)
+    return cfg, mesh, model, reqs, params, static_toks
+
+
+def _fresh_requests(reqs):
+    """Requests carry engine-mutated state (generated tokens); each engine
+    run gets a pristine copy of the same trace."""
+    import copy
+    out = copy.deepcopy(reqs)
+    for r in out:
+        r.tokens, r.prefilled, r.ttft_s = [], False, None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The acceptance gate: engine == static loop, token-identical, while the
+# trace's aggregate KV footprint exceeds the device page budget
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_static_through_churn(setup):
+    cfg, mesh, model, reqs, params, static_toks = setup
+    eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
+                      page_size=PAGE, prefill_chunk=CHUNK, params=params)
+    demand = sum(eng.pool.pages_needed(PROMPT + GEN) for _ in reqs)
+    assert demand > eng.pool.device_pages, \
+        "trace must overflow the device page budget for this test to bite"
+    results = eng.run(_fresh_requests(reqs))
+    assert set(results) == {r.rid for r in reqs}
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], static_toks[i]), \
+            f"request {r.rid}: engine tokens diverged from static loop"
+    # pages genuinely spilled to host and returned — every spilled page
+    # comes back, some via the double-buffered staging path
+    st = eng.pool.stats
+    assert st["spilled_pages"] > 0
+    assert st["fetched_pages"] + st["prefetched_pages"] == st["spilled_pages"]
+    assert st["prefetched_pages"] > 0, \
+        "releases must trigger staged (double-buffered) returns"
+    assert st["peak_resident_pages"] <= eng.pool.device_pages
+
+
+def test_slot_decode_step_matches_whole_batch(setup):
+    """One slot-batched step at a uniform position == the whole-batch
+    decode step, bit for bit (the row-independence the engine builds on)."""
+    from repro.train.steps import build_decode_step
+    cfg, mesh, model, reqs, params, _ = setup
+    shape = ShapeConfig("d", "decode", TOTAL, 3)
+    pshape = ShapeConfig("p", "prefill", PROMPT, 3)
+    pfn, _, _, _ = build_prefill_step(model, pshape, mesh, cache_len=TOTAL)
+    toks3 = jnp.asarray(np.stack([r.prompt for r in reqs[:3]]))
+    logits, cache = pfn(params, {"tokens": toks3})
+    dfn, _, _, _ = build_decode_step(model, shape, mesh, donate=False)
+    sfn, _, _, _ = build_slot_decode_step(model, shape, mesh, donate=False)
+    t = jnp.argmax(logits, -1)[:, None]
+    l1, c1 = dfn(params, cache, {"tokens": t}, jnp.int32(PROMPT))
+    l2, c2 = sfn(params, cache, {"tokens": t},
+                 jnp.full((3,), PROMPT, jnp.int32), jnp.ones((3,), bool))
+    assert jnp.array_equal(l1, l2)
+    for a, b in zip(jtu.tree_leaves(c1), jtu.tree_leaves(c2)):
+        assert jnp.array_equal(a, b)
+
+
+def test_chunked_prefill_bitwise_equals_full(setup):
+    cfg, mesh, model, reqs, params, _ = setup
+    toks = jnp.asarray(np.stack([r.prompt for r in reqs[:2]]))
+    full_logits, full_cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=TOTAL))(
+            params, {"tokens": toks})
+    cache = model.init_cache(2, TOTAL)
+    for lo in range(0, PROMPT, CHUNK):
+        hi = min(lo + CHUNK, PROMPT)
+        lg, cache = jax.jit(model.prefill_chunk)(
+            params, cache, {"tokens": toks[:, lo:hi]}, jnp.int32(lo),
+            jnp.int32(hi))
+    assert jnp.array_equal(lg[:, PROMPT - 1 - lo], full_logits)
+    for a, b in zip(jtu.tree_leaves(cache), jtu.tree_leaves(full_cache)):
+        assert jnp.array_equal(a, b)
+
+
+def test_sampling_deterministic_and_bounded(setup):
+    cfg, mesh, model, reqs, params, _ = setup
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
+                          page_size=PAGE, prefill_chunk=CHUNK,
+                          temperature=0.9, top_k=5, seed=3, params=params)
+        outs.append(eng.run(_fresh_requests(reqs)))
+    for rid in outs[0]:
+        assert np.array_equal(outs[0][rid], outs[1][rid]), \
+            "per-request sampling rng must be deterministic"
+        assert outs[0][rid].shape == (GEN,)
+        assert (outs[0][rid] >= 0).all() and (outs[0][rid] < cfg.vocab_size).all()
+
+
+def test_engine_max_new_one_matches_static(setup):
+    """A request satisfied by its prefill token must finish without a slot
+    or a decode tick — and a page size that does not divide max_len snaps
+    down to one that does instead of crashing spill's page reshape."""
+    cfg, mesh, model, reqs, params, _ = setup
+    one = _fresh_requests(reqs)
+    for r in one:
+        r.max_new = 1
+    _, static1, _ = run_static(model, mesh, reqs, PROMPT, 1, params=params)
+    eng = ServeEngine(model, mesh, slots=SLOTS, max_len=PROMPT + 1,
+                      page_size=4, prefill_chunk=CHUNK, params=params)
+    assert eng.pool.page_size == 1          # gcd(9, 4) snap
+    results = eng.run(one)
+    assert eng._ticks == 0
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], static1[i])
+
+
+# ---------------------------------------------------------------------------
+# Paged pool
+# ---------------------------------------------------------------------------
+
+def test_pool_rejects_ragged_page_grid(setup):
+    cfg, mesh, model, _, _, _ = setup
+    with pytest.raises(ValueError, match="divide"):
+        PagedKVPool(model, slots=1, max_len=14, page_size=4,
+                    device_pages=4, host_pages=4)
+
+def test_pool_spill_attach_roundtrip(setup):
+    cfg, mesh, model, _, _, _ = setup
+    pool = PagedKVPool(model, slots=SLOTS, max_len=TOTAL, page_size=PAGE,
+                       device_pages=2 * pool_pages(TOTAL, PAGE),
+                       host_pages=8)
+    rng = np.random.default_rng(0)
+    req_cache = compat.tree.map(
+        lambda z: jnp.asarray(rng.standard_normal(z.shape), z.dtype),
+        model.init_cache(1, TOTAL))
+    n = pool.pages_needed(PROMPT)
+    pool.spill(7, req_cache, PROMPT, pool.pages_needed(TOTAL))
+    assert pool.stats["spilled_pages"] == n
+    assert not pool.can_spill(pool._host[next(iter(pool._host))].shape[0])
+    pool.attach(7, slot=1)
+    assert pool.status(7) == "dev"
+    # slot 1's rows now hold the request's content region exactly
+    flat_req = dict(_flat(req_cache))
+    for keys, leaf in _flat(pool.cache):
+        info = pool._info[keys]
+        src = flat_req[keys]
+        if info.paged:
+            w = n * PAGE
+            got = leaf[:, 1, :w] if info.stacked else leaf[1, :w]
+            want = src[:, 0, :w] if info.stacked else src[0, :w]
+        else:
+            got = leaf[:, 1] if info.stacked else leaf[1]
+            want = src[:, 0] if info.stacked else src[0]
+        assert jnp.array_equal(got, want), keys
+    pool.release(7)
+    assert pool.resident_pages == 0
+
+
+def test_pool_prefetch_stages_against_budget(setup):
+    cfg, mesh, model, _, _, _ = setup
+    per = pool_pages(TOTAL, PAGE)
+    pool = PagedKVPool(model, slots=SLOTS, max_len=TOTAL, page_size=PAGE,
+                       device_pages=per, host_pages=8)
+    req_cache = model.init_cache(1, TOTAL)
+    pool.spill(1, req_cache, PROMPT, per)
+    pool.spill(2, req_cache, PROMPT, per)
+    assert pool.prefetch(1)                       # fits: budget is free
+    assert pool.status(1) == "staged"
+    assert not pool.prefetch(2), "second reservation must exceed the budget"
+    pool.attach(1, slot=0)
+    assert pool.stats["prefetched_pages"] > 0
+    assert pool.resident_pages == per
+
+
+def pool_pages(total, page):
+    return -(-total // page)
+
+
+def _flat(tree):
+    flat, _ = jtu.tree_flatten_with_path(tree)
+    return [(tuple(getattr(e, "key", str(e)) for e in p), v)
+            for p, v in flat]
+
+
+# ---------------------------------------------------------------------------
+# Planner: serve plans require the paging executor
+# ---------------------------------------------------------------------------
+
+def test_serve_plan_requires_paging_executor():
+    cfg = get_config("olmo-1b")
+    shape = ShapeConfig("serve", "decode", 4096, 16)
+    mesh = MeshSpec((1, 1), ("data", "model"))
+    plan = plan_serve_memory(cfg, shape, mesh,
+                             LMSConfig(hbm_budget=4 * 1024 ** 3),
+                             hwlib.TPU_V5E, slots=16, backlog_slots=32)
+    assert plan.residency["kvcache"] == "host"
+    assert plan.kv_paging is not None
+    assert plan.swap_schedule is not None
+    assert plan.swap_schedule.streams_kvcache
+    assert plan.swap_schedule.bytes_for("kvcache") > 0
+    assert plan.kv_paging.device_pages > 0
+    # the invariant: same residency WITHOUT the declared pool must refuse
+    with pytest.raises(AssertionError, match="paged-pool executor"):
+        check_schedule_invariant(plan.residency, plan.swap_schedule,
+                                 serve=True, kv_paging=None)
+    # declared pool passes; non-serve (static decode) plans keep the old
+    # contract where the per-layer decode stream is the executor
+    check_schedule_invariant(plan.residency, plan.swap_schedule,
+                             serve=True, kv_paging=plan.kv_paging)
+    check_schedule_invariant(plan.residency, plan.swap_schedule)
+
+
+def test_engine_sized_from_serve_plan(setup):
+    """plan_serve_memory -> kv_paging -> pool: the engine takes its page
+    budget from the plan and still serves the trace correctly."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    mspec = MeshSpec((1, 1), ("data", "model"))
+    shape = ShapeConfig("serve", "decode", TOTAL, SLOTS)
+    plan = plan_serve_memory(cfg, shape, mspec,
+                             LMSConfig(hbm_budget=250 * 1024), slots=SLOTS,
+                             backlog_slots=6, page_size=PAGE)
+    assert plan.residency["kvcache"] == "host" and plan.kv_paging is not None
+    eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL, plan=plan,
+                      prefill_chunk=CHUNK, params=params)
+    assert eng.pool.page_size == plan.kv_paging.page_size
+    assert eng.pool.device_pages == plan.kv_paging.device_pages
+    results = eng.run(_fresh_requests(reqs))
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], static_toks[i])
+    assert eng.pool.stats["spilled_pages"] > 0
+
+
+def test_serve_plan_fits_without_pool_when_kv_small():
+    cfg = get_config("olmo-1b")
+    shape = ShapeConfig("serve", "decode", 256, 4)
+    mesh = MeshSpec((1, 1), ("data", "model"))
+    plan = plan_serve_memory(cfg, shape, mesh,
+                             LMSConfig(hbm_budget=64 * 1024 ** 3),
+                             hwlib.TPU_V5E, slots=4)
+    assert plan.residency["kvcache"] == "device"
+    assert plan.kv_paging is None
+    assert plan.fits
+
+
+def test_price_kv_paging_budget_monotone():
+    cfg = get_config("olmo-1b")
+    shape = ShapeConfig("serve", "decode", 4096, 16)
+    mesh = MeshSpec((1, 1), ("data", "model"))
+    small = price_kv_paging(cfg, shape, mesh, budget=4 * 1024 ** 3, slots=16)
+    large = price_kv_paging(cfg, shape, mesh, budget=8 * 1024 ** 3, slots=16)
+    assert large.device_pages >= small.device_pages
+    assert small.page_bytes == large.page_bytes > 0
+    assert small.pages_per_slot == -(-4096 // small.page_size)
