@@ -54,6 +54,54 @@ def run():
     rows.append({"name": "quantize_ref_4096x1024",
                  "us_per_call": _time(jax.jit(quantize_ref), xr),
                  "derived": "int8+f32scales (4x DCN reduction)"})
+    rows += run_decode()
+    return rows
+
+
+def run_decode():
+    """Flash-decode rows: dense-vs-flash (interpret validates the Pallas
+    body; its wall-clock is NOT the TPU number) and int8-vs-f32 page width
+    on the dense path (the measured dequant overhead CPU actually pays)."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.decode_kernel import flash_decode_fwd
+    from repro.kernels.quantize.ref import quantize_ref as qref
+    from repro.models.attention import dense_decode_attention
+
+    rng = np.random.default_rng(1)
+    b, h, kh, smax, d = 4, 8, 2, 512, 64
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, smax, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, smax, kh, d)), jnp.float32)
+    kvl = jnp.asarray([64, 200, 350, 512], jnp.int32)
+
+    dense = jax.jit(dense_decode_attention)
+    us_dense = _time(dense, q, k, v, kvl)
+    bytes_read = 2 * smax * kh * d * 4
+    rows = [{"name": f"decode_dense_f32_b{b}s{smax}",
+             "us_per_call": us_dense,
+             "derived": f"gbps={b*bytes_read/us_dense/1e3:.2f} (reads Smax)"}]
+
+    qk, sk = qref(np.asarray(k).reshape(-1, d))
+    qv, sv = qref(np.asarray(v).reshape(-1, d))
+    k8 = jnp.asarray(qk).reshape(b, smax, kh, d)
+    v8 = jnp.asarray(qv).reshape(b, smax, kh, d)
+    ks = jnp.asarray(sk).reshape(b, smax, kh)
+    vs = jnp.asarray(sv).reshape(b, smax, kh)
+    dense8 = jax.jit(lambda q, k, v, l, ks, vs: dense_decode_attention(
+        q, k, v, l, k_scale=ks, v_scale=vs))
+    us8 = _time(dense8, q, k8, v8, kvl, ks, vs)
+    rows.append({"name": f"decode_dense_int8_b{b}s{smax}",
+                 "us_per_call": us8,
+                 "derived": f"vs_f32={us8/us_dense:.2f}x "
+                            f"pages {d+4}/{4*d} bytes/row"})
+
+    flash = jax.jit(lambda q, k, v, l: flash_decode_fwd(
+        q[:, 0], k, v, l, block_k=128, interpret=True))
+    us_fl = _time(flash, q, k, v, kvl, iters=2)
+    rows.append({"name": f"decode_flash_interp_b{b}s{smax}",
+                 "us_per_call": us_fl,
+                 "derived": "Pallas body under interpret (validation row; "
+                            "TPU timing comes from the roofline)"})
     return rows
 
 

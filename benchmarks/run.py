@@ -51,12 +51,65 @@ def _import_modules():
     return mods
 
 
+def compare_rows(fresh_rows, baseline_path, *, tol: float,
+                 min_us: float) -> int:
+    """Bench regression gate: diff the fresh rows against a committed
+    baseline snapshot keyed by (table, name); any step-time/tok-s row slower
+    than `tol` x its baseline fails. Rows under `min_us` in the baseline are
+    exempt (timer jitter dominates them); rows only on one side are warned
+    about, never failed — renames and new benches must not brick CI.
+
+    Re-baseline (after an intentional perf change, on the CI machine class):
+        python benchmarks/run.py --smoke --out benchmarks/BENCH_baseline.json
+    """
+    with open(baseline_path) as f:
+        base = {(r["table"], r["name"]): r for r in json.load(f)["rows"]}
+    fresh = {(r["table"], r["name"]): r for r in fresh_rows}
+    failures = []
+    for key, b in sorted(base.items()):
+        r = fresh.get(key)
+        if r is None:
+            print(f"COMPARE-MISSING,{key[0]}/{key[1]},baseline row not in "
+                  "fresh run", file=sys.stderr)
+            continue
+        if b["us_per_call"] < min_us:
+            continue
+        ratio = r["us_per_call"] / max(b["us_per_call"], 1e-9)
+        status = "REGRESSED" if ratio > tol else "ok"
+        print(f"compare,{key[0]}/{key[1]},{b['us_per_call']:.1f}us->"
+              f"{r['us_per_call']:.1f}us,{ratio:.2f}x,{status}")
+        if ratio > tol:
+            failures.append((key, ratio))
+    for key in sorted(set(fresh) - set(base)):
+        print(f"COMPARE-NEW,{key[0]}/{key[1]},not in baseline (re-baseline "
+              "to start tracking)", file=sys.stderr)
+    if failures:
+        for key, ratio in failures:
+            print(f"COMPARE-FAILED,{key[0]}/{key[1]},{ratio:.2f}x slower "
+                  f"(tol {tol:.2f}x)", file=sys.stderr)
+    return len(failures)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast analytic benches only; writes BENCH_smoke.json")
     ap.add_argument("--out", default=None,
                     help="override the BENCH json path")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="diff the fresh rows against a committed baseline "
+                         "snapshot; exit 1 on any >tol slowdown")
+    ap.add_argument("--compare-tol", type=float, default=1.25,
+                    help="slowdown ratio that fails the gate (default 1.25 "
+                         "= 25%% slower)")
+    ap.add_argument("--compare-min-us", type=float, default=100.0,
+                    help="skip rows whose baseline is faster than this "
+                         "(timer jitter dominates)")
+    ap.add_argument("--compare-mode", choices=("gate", "warn"),
+                    default="gate",
+                    help="warn: report regressions without failing — for a "
+                         "new machine class whose baseline has not been "
+                         "re-recorded yet")
     args = ap.parse_args()
 
     b = _import_modules()
@@ -104,6 +157,15 @@ def main() -> None:
     print(f"wrote {out} ({len(rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
+    if args.compare:
+        regressions = compare_rows(rows, args.compare, tol=args.compare_tol,
+                                   min_us=args.compare_min_us)
+        if regressions and args.compare_mode == "gate":
+            sys.exit(1)
+        if regressions:
+            print(f"compare-mode=warn: {regressions} regression(s) NOT "
+                  "failing the run — re-record the baseline on this "
+                  "machine class", file=sys.stderr)
 
 
 if __name__ == "__main__":

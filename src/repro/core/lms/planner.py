@@ -136,6 +136,10 @@ class KVPagingPlan:
     # Carried explicitly because seq-independent-cache families (ssm/rglru)
     # have host_pages == 0, so the pool could not derive it
     host_slots: int = 0
+    # page storage width: "model" (full width) or "int8" (codes + per-row
+    # f32 scales — ~half the bf16 page bytes, so ~2x device-resident
+    # concurrency at a fixed byte budget). The engine reads this knob.
+    kv_dtype: str = "model"
 
     @property
     def slot_budget(self) -> int:
@@ -186,7 +190,8 @@ class MemoryPlan:
             kp = self.kv_paging
             lines.append(f"  kv paging: page={kp.page_size}tok "
                          f"dev={kp.device_pages}p host={kp.host_pages}p "
-                         f"({kp.slot_budget} concurrent slots)")
+                         f"({kp.slot_budget} concurrent slots, "
+                         f"{kp.kv_dtype} pages)")
         if self.overlap_grads is not None:
             lines.append(f"  grad reduction: "
                          f"{'overlapped' if self.overlap_grads else 'serialized'}")
@@ -403,12 +408,17 @@ def kv_cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     return total
 
 
-def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None) -> int:
+def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None,
+                       kv_dtype: str = "model") -> int:
     """Per-device bytes one token-position of the WHOLE layer stack adds to
     a single slot's pageable KV. Only full-history "attn" layers grow with
     the sequence; ring (local_attn) and recurrent (ssd/rglru) caches are
     seq-independent per-slot state, and the encoder-decoder cross cache is
-    fixed at encoder_seq — all of those are state, not pages."""
+    fixed at encoder_seq — all of those are state, not pages.
+
+    kv_dtype="int8": pages hold int8 codes plus one f32 scale per
+    token-position per kv head (k and v each), the serve pool's compact
+    page format."""
     tp = _axis_size(mesh, "model")
     kvh_f = tp if cfg.num_kv_heads % max(tp, 1) == 0 else 1
     seq_f = _logical_factor(mesh, "kv_seq", rules)
@@ -416,7 +426,10 @@ def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None) -> int:
     per = 0
     for kind in cfg.layer_kinds():
         if kind == "attn":
-            per += 2 * cfg.num_kv_heads * cfg.head_dim * 2 // f
+            if kv_dtype == "int8":
+                per += 2 * cfg.num_kv_heads * (cfg.head_dim * 1 + 4) // f
+            else:
+                per += 2 * cfg.num_kv_heads * cfg.head_dim * 2 // f
     return per
 
 
@@ -424,7 +437,7 @@ def price_kv_paging(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
                     budget: int, page_size: int = 64,
                     slots: Optional[int] = None,
                     backlog_slots: Optional[int] = None,
-                    rules=None) -> KVPagingPlan:
+                    rules=None, kv_dtype: str = "model") -> KVPagingPlan:
     """Size the paged KV pool for a serve plan: how many pages of decode KV
     fit the pool's HBM allotment after the per-slot recurrent state is
     charged — the device page budget the engine's admission control
@@ -444,11 +457,14 @@ def price_kv_paging(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
     # the largest dividing page size so plan and executor agree
     page_size = math.gcd(shape.seq_len, page_size)
 
-    token_bytes = kv_token_bytes_dev(cfg, mesh, rules)
+    # page width follows kv_dtype; the STATE residual must be carved out of
+    # the per-slot total at MODEL width (state never quantizes), or the
+    # int8 savings would be double-counted as extra state
+    token_bytes = kv_token_bytes_dev(cfg, mesh, rules, kv_dtype=kv_dtype)
+    token_bytes_model = kv_token_bytes_dev(cfg, mesh, rules)
     shape1 = dataclasses.replace(shape, global_batch=dp)       # per-slot view
     per_slot_total = kv_cache_bytes_dev(cfg, shape1, mesh, rules=rules)
-    paged_per_slot = token_bytes * shape.seq_len
-    state_bytes = max(per_slot_total - paged_per_slot, 0)
+    state_bytes = max(per_slot_total - token_bytes_model * shape.seq_len, 0)
     pages_per_slot = -(-shape.seq_len // page_size) if token_bytes else 0
     page_bytes = token_bytes * page_size
 
@@ -466,7 +482,7 @@ def price_kv_paging(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
                         pages_per_slot=int(pages_per_slot),
                         device_pages=int(device_pages),
                         host_pages=int(backlog * pages_per_slot),
-                        host_slots=int(backlog))
+                        host_slots=int(backlog), kv_dtype=kv_dtype)
 
 
 def plan_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
@@ -474,7 +490,8 @@ def plan_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                       hw: hwlib.HardwareSpec = hwlib.DEFAULT, *,
                       slots: Optional[int] = None,
                       backlog_slots: Optional[int] = None,
-                      page_size: int = 64, rules=None) -> MemoryPlan:
+                      page_size: int = 64, rules=None,
+                      kv_dtype: str = "model") -> MemoryPlan:
     """Serving-engine plan (continuous batching over `slots` decode slots
     with a `backlog_slots`-deep admission queue): decode-shape residency
     PLUS the paged-pool sizing that executes kvcache host residency.
@@ -522,7 +539,8 @@ def plan_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         paging = price_kv_paging(cfg, shape, mesh,
                                  budget=budget - params_eff - transient,
                                  page_size=page_size, slots=slots,
-                                 backlog_slots=backlog, rules=rules)
+                                 backlog_slots=backlog, rules=rules,
+                                 kv_dtype=kv_dtype)
         residency["kvcache"] = "host"
         # one request's lifecycle: prefill pages spill out, then return
         class_swap["kvcache"] = 2 * paging.pages_per_slot * paging.page_bytes

@@ -1,5 +1,8 @@
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention, flash_decode
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.decode_kernel import flash_decode_fwd
+from repro.kernels.flash_attention.ref import (flash_attention_ref,
+                                               flash_decode_ref)
 
-__all__ = ["flash_attention", "flash_attention_fwd", "flash_attention_ref"]
+__all__ = ["flash_attention", "flash_attention_fwd", "flash_attention_ref",
+           "flash_decode", "flash_decode_fwd", "flash_decode_ref"]

@@ -1,0 +1,196 @@
+"""Split-KV flash-decode as a Pallas TPU kernel (the serve hot path).
+
+One query token per slot against a slot-batched cache: q [B,H,D], caches
+[B,Smax,K,D] in the MODEL layout (seq before heads — the cache is never
+transposed on the hot path), per-slot valid lengths kv_len [B]. Online
+softmax over KV blocks with the (m, l, acc) accumulators in VMEM scratch,
+GQA expressed by folding query heads into [B,K,G,D] so the kernel contracts
+a [G,D] query tile against each [block_k, D] key block on the MXU.
+
+Length-aware blocking: kv_len rides in as a scalar-prefetch operand, so the
+k/v index_maps clamp the block index to the slot's last valid block — Pallas
+elides the HBM->VMEM copy when a BlockSpec revisits the same block, so a
+slot at position ~300 streams ~300 positions of cache, not Smax. Blocks past
+the valid length also skip their compute via pl.when.
+
+int8 KV pages: the quantized variant takes (k_q, k_scale, v_q, v_scale)
+with int8 codes [B,Smax,K,D] and per-row f32 scales [B,Smax,K] (one scale
+per token-position per kv head — strictly finer than per-page), and fuses
+the dequantize into the block load: HBM traffic is the int8 codes + the
+f32 row scales, ~half the bf16 cache bytes and ~quarter of f32.
+
+Rows with kv_len == 0 (inactive serve slots) return exact zeros (l stays 0),
+unlike the dense oracle whose all-masked softmax degenerates to a uniform
+average — serve never reads those rows; the oracle in ref.py zeroes them to
+give tests a single contract.
+
+CPU caveat (DESIGN.md §8): off-TPU the kernel only runs under interpret
+mode; int8 tiles narrower than the (32, 128) native int8 tile lower in
+interpret but may need padding on real hardware for head_dim < 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _decode_body(kvl, k, v, s, *, ki, block_k, g, m_ref, l_ref, acc_ref):
+    """Shared online-softmax block update. s [g, block_k] raw logits."""
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (g, block_k), 1)
+    mask = k_pos < kvl
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]                                   # [g]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    m_ref[...] = m_new
+    # zero masked kv rows of v: 0-prob * garbage would still poison the dot
+    v_valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < kvl
+    vb = jnp.where(v_valid, v, 0.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _fd_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               sm_scale: float, block_k: int, g: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    kvl = kvl_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * block_k < kvl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # [g, d]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [block_k, d]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        _decode_body(kvl, k, v, s, ki=ki, block_k=block_k, g=g,
+                     m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        # kv_len == 0 rows: l stays 0 -> exact zeros
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def _fd_kernel_int8(kvl_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, sm_scale: float, block_k: int,
+                    g: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    kvl = kvl_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * block_k < kvl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # [g, d]
+        # fused dequantize: int8 codes * per-row scale, in VMEM
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        _decode_body(kvl, k, v, s, ki=ki, block_k=block_k, g=g,
+                     m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(q, k_cache, v_cache, kv_len, *, k_scale=None,
+                     v_scale=None, block_k: int = 256,
+                     interpret: bool = False):
+    """q [B,H,D]; caches [B,Smax,K,D] (model layout); kv_len [B] int32.
+    k_scale/v_scale [B,Smax,K] f32 iff the caches are int8 codes.
+    Returns [B,H,D] in q.dtype."""
+    b, h, d = q.shape
+    smax, kh = k_cache.shape[1], k_cache.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    quantized = k_scale is not None
+    block_k = min(block_k, smax)
+    nk = pl.cdiv(smax, block_k)
+    sm_scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, kh, g, d)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+
+    def kv_block(b_, h_, j, kvl):
+        # length-aware blocking: clamp to the slot's last valid block so
+        # out-of-range grid steps revisit it (revisited block => the HBM
+        # copy is elided; compute is skipped by pl.when)
+        last = jnp.maximum(pl.cdiv(kvl[b_], block_k) - 1, 0)
+        return (b_, jnp.minimum(j, last), h_, 0)
+
+    def scale_block(b_, h_, j, kvl):
+        b2, j2, h2, _ = kv_block(b_, h_, j, kvl)
+        return (b2, j2, h2)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h_, j, kvl: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, block_k, 1, d), kv_block),
+    ]
+    operands = [qg, k_cache]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_k, 1), scale_block))
+        operands.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, block_k, 1, d), kv_block))
+    operands.append(v_cache)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_k, 1), scale_block))
+        operands.append(v_scale)
+
+    kernel = functools.partial(
+        _fd_kernel_int8 if quantized else _fd_kernel,
+        sm_scale=sm_scale, block_k=block_k, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h_, j, kvl: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len, *operands)
+    return out.reshape(b, h, d)

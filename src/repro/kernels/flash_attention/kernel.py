@@ -26,7 +26,7 @@ NEG_INF = -1e30
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-               causal: bool, window: int, sm_scale: float,
+               causal: bool, window: int, sm_scale: float, q_offset: int,
                block_q: int, block_k: int, seq_kv: int, seq_q: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -43,9 +43,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # [bq, bk]
 
-    # positions: decode-style offset aligns q to the end of kv
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
-        + (seq_kv - seq_q if causal else 0)
+        + q_offset
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
     mask = k_pos < seq_kv
     if causal:
@@ -75,12 +74,16 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                        block_q: int = 256, block_k: int = 256,
+                        q_offset=None, block_q: int = 256, block_k: int = 256,
                         interpret: bool = False):
-    """q [B,H,Sq,D]; k,v [B,K,Skv,D]. Returns [B,H,Sq,D]."""
+    """q [B,H,Sq,D]; k,v [B,K,Skv,D]. Returns [B,H,Sq,D]. q_offset: absolute
+    kv position of query row 0; None keeps the historical default (queries
+    aligned to the end of kv when causal)."""
     b, h, sq, d = q.shape
     kh, skv = k.shape[1], k.shape[2]
     assert h % kh == 0
+    if q_offset is None:
+        q_offset = skv - sq if causal else 0
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
     nq = pl.cdiv(sq, block_q)
@@ -90,7 +93,8 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
     grid = (b, h, nq, nk)
     kernel = functools.partial(
         _fa_kernel, causal=causal, window=window, sm_scale=sm_scale,
-        block_q=block_q, block_k=block_k, seq_kv=skv, seq_q=sq)
+        q_offset=int(q_offset), block_q=block_q, block_k=block_k,
+        seq_kv=skv, seq_q=sq)
 
     return pl.pallas_call(
         kernel,

@@ -1,36 +1,57 @@
-"""jit'd public wrapper: dispatches to the Pallas kernel on TPU, to the pure
-jnp oracle elsewhere (XLA:CPU cannot lower TPU Pallas). Accepts the model's
-[B,S,H,D] layout and converts to the kernel's [B,H,S,D].
+"""jit'd public wrappers: dispatch to the Pallas kernels on TPU (or under
+the CI forced-interpret flag), to the pure jnp oracles elsewhere (XLA:CPU
+cannot lower TPU Pallas natively). `flash_attention` accepts the model's
+[B,S,H,D] layout and converts to the prefill kernel's [B,H,S,D];
+`flash_decode` takes the decode cache's [B,Smax,K,D] layout directly —
+the cache is never transposed on the serve hot path.
 """
 import functools
-import os
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.gates import resolve_interpret, use_pallas
+from repro.kernels.flash_attention.decode_kernel import flash_decode_fwd
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.ref import (flash_attention_ref,
+                                               flash_decode_ref)
+
+# compat: the historical gate name, used by tests and callers
+_use_pallas = use_pallas
 
 
-def _use_pallas() -> bool:
-    force = os.environ.get("REPRO_FORCE_PALLAS", "")
-    if force == "1":
-        return True
-    if force == "0":
-        return False
-    return jax.default_backend() == "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    interpret: bool = False):
-    """q [B,S,H,D]; k,v [B,Skv,K,D] (model layout). Returns [B,S,H,D]."""
+                    q_offset=None, interpret: bool = False):
+    """q [B,S,H,D]; k,v [B,Skv,K,D] (model layout). Returns [B,S,H,D].
+    q_offset: absolute kv position of query row 0 (None: decode-style
+    align-to-end default when causal)."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    if _use_pallas() or interpret:
+    if use_pallas(interpret):
         o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
-                                interpret=interpret or jax.default_backend() != "tpu")
+                                q_offset=q_offset,
+                                interpret=resolve_interpret(interpret))
     else:
-        o = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+        o = flash_attention_ref(qt, kt, vt, causal=causal, window=window,
+                                q_offset=q_offset)
     return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, *, k_scale=None, v_scale=None,
+                 block_k: int = 256, interpret: bool = False):
+    """Split-KV flash decode: q [B,1,H,D] or [B,H,D]; caches [B,Smax,K,D];
+    kv_len scalar or [B] per-slot valid lengths. k_scale/v_scale [B,Smax,K]
+    iff the caches hold int8 codes (fused dequantize). Returns q's shape."""
+    squeeze = q.ndim == 4
+    q3 = q[:, 0] if squeeze else q
+    if use_pallas(interpret):
+        o = flash_decode_fwd(q3, k_cache, v_cache, kv_len, k_scale=k_scale,
+                             v_scale=v_scale, block_k=block_k,
+                             interpret=resolve_interpret(interpret))
+    else:
+        o = flash_decode_ref(q3, k_cache, v_cache, kv_len, k_scale=k_scale,
+                             v_scale=v_scale)
+    return o[:, None] if squeeze else o

@@ -1,8 +1,9 @@
-"""Pure-jnp oracle for the flash-attention kernel (exact softmax attention
+"""Pure-jnp oracles for the flash-attention kernels (exact softmax attention
 with optional causal + sliding-window masking). GQA handled by head mapping:
 kv head of query head h is h * K // H.
 """
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -10,14 +11,19 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
-    """q [B,H,Sq,D]; k,v [B,K,Skv,D] (kernel layout: heads before seq)."""
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: Optional[int] = None):
+    """q [B,H,Sq,D]; k,v [B,K,Skv,D] (kernel layout: heads before seq).
+    q_offset: absolute kv position of query row 0; None keeps the historical
+    decode-style default (queries aligned to the END of kv when causal)."""
     b, h, sq, d = q.shape
     kh = k.shape[1]
     g = h // kh
+    if q_offset is None:
+        q_offset = k.shape[2] - sq if causal else 0
     qg = q.reshape(b, kh, g, sq, d).astype(jnp.float32) / math.sqrt(d)
     s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
-    qpos = jnp.arange(sq)[:, None] + (k.shape[2] - sq if causal else 0)
+    qpos = jnp.arange(sq)[:, None] + q_offset
     kpos = jnp.arange(k.shape[2])[None, :]
     mask = jnp.ones((sq, k.shape[2]), bool)
     if causal:
@@ -28,3 +34,29 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
     return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, kv_len, *, k_scale=None,
+                     v_scale=None):
+    """Dense oracle for the flash-decode kernel. q [B,H,D]; caches
+    [B,Smax,K,D] (MODEL layout: seq before heads); kv_len scalar or [B].
+    k_scale/v_scale [B,Smax,K] iff the caches hold int8 codes. Rows with
+    kv_len == 0 return exact zeros, matching the kernel (l stays 0), NOT the
+    all-masked softmax's uniform average."""
+    b, h, d = q.shape
+    smax, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kf)
+    mask = jnp.arange(smax)[None, :] < kv_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    o = jnp.where((kv_len > 0)[:, None, None, None], o, 0.0)
+    return o.reshape(b, h, d).astype(q.dtype)

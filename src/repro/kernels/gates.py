@@ -1,0 +1,39 @@
+"""Shared dispatch gate for every Pallas op (flash_attention, flash decode,
+ssd_scan, rmsnorm, quantize).
+
+Two environment knobs, read at trace time:
+
+* ``REPRO_FORCE_PALLAS=1|0`` — force the Pallas path on / off regardless of
+  backend (the historical knob; off-TPU the kernel runs in interpret mode).
+* ``REPRO_PALLAS_INTERPRET=1`` — CI's forced-interpret stage: every gate
+  takes the Pallas path with ``interpret=True`` so the actual kernel bodies
+  execute on CPU instead of silently falling back to the jnp oracle. The
+  flag is read when an op is first traced, so it must be set before the
+  process starts (ci.sh runs the kernel tests in a fresh pytest process).
+"""
+import os
+
+import jax
+
+
+def force_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
+
+
+def use_pallas(interpret: bool = False) -> bool:
+    """True iff the op should take the Pallas kernel path."""
+    if interpret or force_interpret():
+        return True
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "1":
+        return True
+    if force == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool = False) -> bool:
+    """Interpret-mode flag to pass into a pallas_call: explicit request, the
+    CI force flag, or any backend that cannot lower TPU Pallas natively."""
+    return (interpret or force_interpret()
+            or jax.default_backend() != "tpu")

@@ -1,27 +1,24 @@
 import functools
-import os
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.gates import resolve_interpret, use_pallas
 from repro.kernels.quantize.kernel import quantize_fwd, dequantize_fwd
 from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
 
-
-def _use_pallas(interpret):
-    force = os.environ.get("REPRO_FORCE_PALLAS", "")
-    return interpret or force == "1" or (force != "0" and jax.default_backend() == "tpu")
+# compat: the historical gate name
+_use_pallas = use_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize(x, *, interpret: bool = False):
-    if _use_pallas(interpret):
-        return tuple(quantize_fwd(x, interpret=interpret or jax.default_backend() != "tpu"))
+    if use_pallas(interpret):
+        return tuple(quantize_fwd(x, interpret=resolve_interpret(interpret)))
     return quantize_ref(x)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dequantize(q, scale, *, interpret: bool = False):
-    if _use_pallas(interpret):
-        return dequantize_fwd(q, scale, interpret=interpret or jax.default_backend() != "tpu")
+    if use_pallas(interpret):
+        return dequantize_fwd(q, scale, interpret=resolve_interpret(interpret))
     return dequantize_ref(q, scale)

@@ -1,8 +1,8 @@
 import functools
-import os
 
 import jax
 
+from repro.kernels.gates import resolve_interpret, use_pallas
 from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
@@ -12,11 +12,9 @@ def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = False):
     """x [..., d] -> same; fused on TPU, oracle elsewhere."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    force = os.environ.get("REPRO_FORCE_PALLAS", "")
-    use = force == "1" or (force != "0" and jax.default_backend() == "tpu")
-    if use or interpret:
+    if use_pallas(interpret):
         o = rmsnorm_fwd(x2, scale, eps=eps,
-                        interpret=interpret or jax.default_backend() != "tpu")
+                        interpret=resolve_interpret(interpret))
     else:
         o = rmsnorm_ref(x2, scale, eps=eps)
     return o.reshape(shape)

@@ -1,27 +1,21 @@
 """Public SSD scan op: Pallas kernel on TPU, jnp chunked oracle elsewhere."""
 import functools
-import os
 
 import jax
 
+from repro.kernels.gates import resolve_interpret, use_pallas
 from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
 from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_decode_step_ref
 
-
-def _use_pallas() -> bool:
-    force = os.environ.get("REPRO_FORCE_PALLAS", "")
-    if force == "1":
-        return True
-    if force == "0":
-        return False
-    return jax.default_backend() == "tpu"
+# compat: the historical gate name
+_use_pallas = use_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
-    if _use_pallas() or interpret:
+    if use_pallas(interpret):
         y = ssd_scan_fwd(x, dt, A, B, C, chunk=chunk,
-                         interpret=interpret or jax.default_backend() != "tpu")
+                         interpret=resolve_interpret(interpret))
         return y
     y, _ = ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
     return y

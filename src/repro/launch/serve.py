@@ -86,12 +86,18 @@ def main(argv=None):
                    help="KV pool page size in tokens")
     p.add_argument("--prefill-chunk", type=int, default=32,
                    help="chunked-prefill width (0 = whole prompt)")
+    p.add_argument("--kv-dtype", choices=("model", "int8"), default="model",
+                   help="KV page storage width: int8 stores codes + per-row "
+                        "scales (~half the page bytes, DESIGN.md §8)")
     p.add_argument("--static", action="store_true",
                    help="run the whole-batch baseline loop instead")
     args = p.parse_args(argv)
     if args.static and (args.temperature > 0 or args.top_k):
         p.error("--temperature/--top-k sample in the engine only; the "
                 "--static baseline loop is greedy by construction")
+    if args.static and args.kv_dtype != "model":
+        p.error("--kv-dtype applies to the engine's paged pool; the "
+                "--static baseline decodes a model-width cache")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     dims = tuple(int(x) for x in args.mesh.split("x"))
@@ -114,7 +120,8 @@ def main(argv=None):
     eng = ServeEngine(model, mesh, slots=min(args.slots, args.requests),
                       max_len=total, page_size=args.page_size,
                       prefill_chunk=args.prefill_chunk,
-                      temperature=args.temperature, top_k=args.top_k)
+                      temperature=args.temperature, top_k=args.top_k,
+                      kv_dtype=args.kv_dtype)
     results = eng.run(reqs)
     m = eng.metrics()
     returned = int(m["pool_fetched_pages"] + m["pool_prefetched_pages"])

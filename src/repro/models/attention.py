@@ -196,25 +196,41 @@ def local_block_attention(q, k, v, *, window: int, q_offset: int = 0):
 # Decode (single new token against a cache)
 # ---------------------------------------------------------------------------
 
-def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
-    """q [B,1,H,D]; caches [B,Smax,K,D]; kv_len: count of valid slots —
-    a scalar (whole-batch decode) or a [B] vector (slot-batched decode,
-    each request at its own position). For window caches (ring buffers)
-    validity is positional recency."""
-    b, _, h, d = q.shape
-    kh = k_cache.shape[2]
-    g = h // kh
-    smax = k_cache.shape[1]
-    qg = q.reshape(b, kh, g, d).astype(jnp.float32) / math.sqrt(d)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
-    kpos = jnp.arange(smax)
-    # [1, Smax] for scalar kv_len (same broadcast as before), [B, Smax] for
-    # per-slot lengths
-    mask = kpos[None, :] < jnp.atleast_1d(kv_len)[:, None]
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
-    return o.reshape(b, 1, h, d)
+def dense_decode_attention(q, k_cache, v_cache, kv_len, *, k_scale=None,
+                           v_scale=None):
+    """Dense decode oracle: q [B,1,H,D]; caches [B,Smax,K,D]; kv_len scalar
+    or [B] (per-slot lengths). k_scale/v_scale [B,Smax,K] iff the caches
+    hold int8 codes. Reads all Smax positions. ONE implementation shared
+    with the kernel-test oracle (flash_decode_ref) so the shipped CPU
+    lowering and the reference the Pallas kernel is tested against cannot
+    drift — including the kv_len==0 exact-zero contract."""
+    from repro.kernels.flash_attention.ref import flash_decode_ref
+    o = flash_decode_ref(q[:, 0], k_cache, v_cache, kv_len,
+                         k_scale=k_scale, v_scale=v_scale)
+    return o[:, None]
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                     k_scale=None, v_scale=None):
+    """Decode-attention entry (the serve hot path): q [B,1,H,D]; caches
+    [B,Smax,K,D]; kv_len: count of valid slots — a scalar (whole-batch
+    decode) or a [B] vector (slot-batched decode, each request at its own
+    position). For window caches (ring buffers) validity is positional
+    recency, so kv_len covers them too. k_scale/v_scale: per-row f32 scales
+    iff the caches hold int8 codes (int8 KV pages).
+
+    Dispatch: the split-KV flash-decode Pallas kernel on TPU (or under
+    REPRO_FORCE_PALLAS / REPRO_PALLAS_INTERPRET) — online softmax, fused
+    dequantize, length-aware blocking so a slot at position p streams ~p
+    positions, not Smax; the dense einsum elsewhere (XLA:CPU cannot lower
+    TPU Pallas natively)."""
+    from repro.kernels.gates import use_pallas
+    if use_pallas():
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_decode(q, k_cache, v_cache, kv_len,
+                                   k_scale=k_scale, v_scale=v_scale)
+    return dense_decode_attention(q, k_cache, v_cache, kv_len,
+                                  k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -234,5 +250,8 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
                                    chunk=chunk, q_offset=q_offset)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
-        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+        # q_offset threads through (it used to be silently dropped, which
+        # broke chunked prefill / partial-cache calls under impl="pallas")
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset)
     raise ValueError(impl)

@@ -1,0 +1,127 @@
+"""int8 KV-cache tree transforms (serve hot path, DESIGN.md §8).
+
+A full-history attention layer's decode cache {"k","v"} ([B,Smax,K,D] or
+scan-stacked [L,B,Smax,K,D]) is replaced by int8 codes plus per-row f32
+scales: {"k","v" int8, "k_scale","v_scale" f32 [..,Smax,K]} — one symmetric
+scale per token-position per kv head (strictly finer than per-page, so page
+granularity never crosses a scale boundary). Quantization uses the existing
+kernels/quantize ops on a [rows, D] view, so the TPU path runs the Pallas
+quantize kernel.
+
+Only layer caches whose keys are exactly {"k","v"} and whose seq axis spans
+the full cache capacity transform: local-attention rings (seq == window),
+recurrent state (no k/v), and xattn caches (carry "xk"/"xv") stay at model
+width — the paged pool treats their leaves as before. The serve engine
+resolves the knob (`kv_dtype="int8"`), threads the transformed tree through
+`build_slot_decode_step`, and the pool quantizes prefill output at its
+boundary (spill / attach_fresh), so training and prefill numerics are
+untouched.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ops as q_ops
+
+KV_DTYPES = ("model", "int8")
+SCALE_SUFFIX = "_scale"
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    return kv_dtype
+
+
+def is_quantized_cache(layer_cache) -> bool:
+    return isinstance(layer_cache, dict) and "k_scale" in layer_cache
+
+
+def quantize_kv_leaf(x):
+    """[..., D] float -> (int8 codes [..., D], f32 scales [...]). Symmetric
+    per-row over the head dim, via the shared quantize op (Pallas on TPU)."""
+    d = x.shape[-1]
+    q, s = q_ops.quantize(x.reshape(-1, d))
+    return (q.reshape(x.shape),
+            s.astype(jnp.float32).reshape(x.shape[:-1]))
+
+
+def dequantize_kv_leaf(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _transform(tree, seq_len: Optional[int], fn):
+    """Walk nested cache dicts; apply fn to every {"k","v"}-only layer cache
+    whose seq axis (always -3 of a k/v leaf) spans the full capacity."""
+    if not isinstance(tree, dict):
+        return tree
+    if set(tree.keys()) == {"k", "v"}:
+        k = tree["k"]
+        sdim = k.shape[-3] if hasattr(k, "shape") and len(k.shape) >= 3 else None
+        if sdim is not None and (seq_len is None or sdim == seq_len):
+            return fn(tree)
+        return tree
+    return {key: _transform(val, seq_len, fn) for key, val in tree.items()}
+
+
+def quantize_cache_tree(cache, seq_len: Optional[int] = None):
+    """Concrete cache tree -> int8 tree. seq_len: the cache capacity (leaves
+    whose seq axis differs — rings — are left at model width); None
+    transforms every {"k","v"} layer cache."""
+    def q(layer):
+        kq, ks = quantize_kv_leaf(layer["k"])
+        vq, vs = quantize_kv_leaf(layer["v"])
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return _transform(cache, seq_len, q)
+
+
+def dequantize_cache_tree(cache, dtype=jnp.float32):
+    def dq(layer):
+        if "k_scale" not in layer:
+            return layer
+        return {"k": dequantize_kv_leaf(layer["k"], layer["k_scale"], dtype),
+                "v": dequantize_kv_leaf(layer["v"], layer["v_scale"], dtype)}
+    if not isinstance(cache, dict):
+        return cache
+    if is_quantized_cache(cache):
+        return dq(cache)
+    return {k: dequantize_cache_tree(v, dtype) if isinstance(v, dict) else v
+            for k, v in cache.items()}
+
+
+def quantize_cache_abstract(avals, specs, seq_len: Optional[int] = None):
+    """Transform the (ShapeDtypeStruct tree, PartitionSpec tree) pair the
+    way quantize_cache_tree transforms the concrete cache — scale leaves
+    take the k/v spec minus its head_dim entry."""
+    from jax.sharding import PartitionSpec as P
+
+    def walk(a, s):
+        if not isinstance(a, dict):
+            return a, s
+        if set(a.keys()) == {"k", "v"}:
+            ka = a["k"]
+            if len(ka.shape) >= 3 and (seq_len is None
+                                       or ka.shape[-3] == seq_len):
+                def scale_of(aval, spec):
+                    sa = jax.ShapeDtypeStruct(aval.shape[:-1], jnp.float32)
+                    sp = P(*tuple(spec)[:len(aval.shape) - 1])
+                    return sa, sp
+                ks_a, ks_s = scale_of(a["k"], s["k"])
+                vs_a, vs_s = scale_of(a["v"], s["v"])
+                na = {"k": jax.ShapeDtypeStruct(a["k"].shape, jnp.int8),
+                      "v": jax.ShapeDtypeStruct(a["v"].shape, jnp.int8),
+                      "k_scale": ks_a, "v_scale": vs_a}
+                ns = {"k": s["k"], "v": s["v"],
+                      "k_scale": ks_s, "v_scale": vs_s}
+                return na, ns
+            return a, s
+        na, ns = {}, {}
+        for key in a:
+            na[key], ns[key] = walk(a[key], s[key])
+        return na, ns
+
+    return walk(avals, specs)

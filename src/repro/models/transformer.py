@@ -15,6 +15,7 @@ from repro.config.base import ModelConfig
 from repro.core.lms.offload import stream_layer_to_device
 from repro.core.lms.policies import tag
 from repro.models import attention as attn_mod
+from repro.models import kvquant
 from repro.models.attention import (attention_defs, project_qkv, out_proj,
                                     decode_attention)
 from repro.models.layers import (ParamDef, apply_mlp, apply_norm, mlp_defs,
@@ -551,16 +552,30 @@ def apply_layer_decode_slots(cfg, kind, p, x, cache, positions, active, ctx):
         smax = cache["k"].shape[1]
         slots = (positions % smax) if window else jnp.minimum(positions, smax - 1)
         cache_axes = ("batch", "kv_seq", "kv_heads", None)
+        # inactive rows mask every key (kv_len 0): finite garbage, never read
+        kv_len = jnp.where(active, jnp.minimum(positions + 1, smax), 0)
+        scales = {}
+        if "k_scale" in cache:
+            # int8 KV pages (serve engine, kv_dtype="int8"): quantize the
+            # new token's k/v rows and write codes + per-row scales; the
+            # flash-decode kernel fuses the dequantize into the block load
+            scale_axes = ("batch", "kv_seq", "kv_heads")
+            k, ks = kvquant.quantize_kv_leaf(k)
+            v, vs = kvquant.quantize_kv_leaf(v)
+            scales["k_scale"] = _slot_write(
+                constrain(cache["k_scale"], *scale_axes), ks, slots, active)
+            scales["v_scale"] = _slot_write(
+                constrain(cache["v_scale"], *scale_axes), vs, slots, active)
         ck = _slot_write(constrain(cache["k"], *cache_axes), k, slots, active)
         cv = _slot_write(constrain(cache["v"], *cache_axes), v, slots, active)
         ck = constrain(ck, *cache_axes)
         cv = constrain(cv, *cache_axes)
-        # inactive rows mask every key (kv_len 0): finite garbage, never read
-        kv_len = jnp.where(active, jnp.minimum(positions + 1, smax), 0)
-        o = decode_attention(q, ck, cv, kv_len)
+        o = decode_attention(q, ck, cv, kv_len,
+                             k_scale=scales.get("k_scale"),
+                             v_scale=scales.get("v_scale"))
         x = x + out_proj(cfg, p["attn"], o)
         x, _ = _ffn(cfg, p, x)
-        return x, {"k": ck, "v": cv}
+        return x, {"k": ck, "v": cv, **scales}
     if kind == "xattn":
         h = apply_norm(cfg, p.get("ln1", {}), x)
         q, k, v = project_qkv(cfg, p["attn"], h)

@@ -43,18 +43,27 @@ class ServeEngine:
                  device_pages: Optional[int] = None,
                  host_pages: Optional[int] = None, prefill_chunk: int = 0,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 eos_id: Optional[int] = None, params=None):
+                 eos_id: Optional[int] = None, params=None,
+                 kv_dtype: Optional[str] = None):
         cfg = model.cfg
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.slots, self.max_len = slots, max_len
         self.temperature, self.top_k = temperature, top_k
         self.seed, self.eos_id = seed, eos_id
 
+        paging = plan.kv_paging if plan is not None else None
+        # kv_dtype resolution: explicit arg > the planner's priced knob >
+        # model width. int8 halves the page budget bytes and the pinned-host
+        # arena (pool boundary quantization + per-row scales, DESIGN.md §8).
+        if kv_dtype is None:
+            kv_dtype = (paging.kv_dtype if paging is not None
+                        and paging.kv_dtype == "int8" else "model")
+        self.kv_dtype = kv_dtype
+
         shape = ShapeConfig("serve_slots", "decode", max_len, slots)
         (self._decode_fn, params_sh, _,
          cache_sh) = build_slot_decode_step(model, shape, mesh, plan=plan,
-                                            donate=True)
-        paging = plan.kv_paging if plan is not None else None
+                                            donate=True, kv_dtype=kv_dtype)
         if paging is not None:
             page_size = paging.page_size
             device_pages = (paging.device_pages if device_pages is None
@@ -76,7 +85,8 @@ class ServeEngine:
                                 device_pages=device_pages,
                                 host_pages=host_pages,
                                 host_slots=host_slots,
-                                cache_sharding=cache_sh)
+                                cache_sharding=cache_sh,
+                                kv_dtype=kv_dtype)
         self.params = (jax.device_put(model.init(jax.random.key(seed)),
                                       params_sh)
                        if params is None else params)

@@ -46,6 +46,11 @@ import numpy as np
 
 from repro import compat
 from repro.core.lms.offload import DEVICE, HOST, effective_kind
+from repro.models import kvquant
+
+# leaves that page along the seq axis: full-history attn k/v, plus their
+# per-row scale siblings when the pool stores int8 pages
+PAGED_LEAF_KEYS = ("k", "v", "k_scale", "v_scale")
 
 
 def _path_keys(path) -> Tuple[str, ...]:
@@ -90,7 +95,8 @@ def _write_block(cache_leaf, block, slot, *, axis):
 class PagedKVPool:
     def __init__(self, model, *, slots: int, max_len: int, page_size: int,
                  device_pages: int, host_pages: int,
-                 host_slots: Optional[int] = None, cache_sharding=None):
+                 host_slots: Optional[int] = None, cache_sharding=None,
+                 kv_dtype: str = "model"):
         cfg = model.cfg
         if max_len % page_size:
             raise ValueError(
@@ -99,7 +105,14 @@ class PagedKVPool:
                 "attach's contiguous write disagree about the content width")
         self.slots, self.max_len, self.page_size = slots, max_len, page_size
         self.device_pages = device_pages
+        self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
         self.cache = model.init_cache(slots, max_len)
+        if self.kv_dtype == "int8":
+            # int8 KV pages: attn k/v leaves become codes + per-row scale
+            # leaves — both arenas (device AND pinned host) store the
+            # compact format, halving the page budget bytes at fixed
+            # concurrency (DESIGN.md §8)
+            self.cache = kvquant.quantize_cache_tree(self.cache, max_len)
         if cache_sharding is not None:
             self.cache = jax.device_put(self.cache, cache_sharding)
         host_slots = host_slots if host_slots is not None else max(
@@ -113,7 +126,7 @@ class PagedKVPool:
             keys = _path_keys(path)
             stacked = keys[0].startswith("stack")
             ba = 1 if stacked else 0
-            paged = (keys[-1] in ("k", "v")
+            paged = (keys[-1] in PAGED_LEAF_KEYS
                      and leaf.ndim > ba + 1 and leaf.shape[ba + 1] == max_len)
             self._info[keys] = _LeafInfo(keys, stacked, ba, paged)
             rest = leaf.shape[ba + 1:]
@@ -194,11 +207,20 @@ class PagedKVPool:
         node[keys[-1]] = _write_block(node[keys[-1]], block,
                                       jnp.int32(slot), axis=info.batch_axis)
 
+    def _ingest(self, req_cache):
+        """Prefill output enters the pool at model width; int8 pools
+        quantize the pageable k/v leaves here (the pool boundary), so
+        prefill math itself stays untouched."""
+        if self.kv_dtype == "int8":
+            return kvquant.quantize_cache_tree(req_cache, self.max_len)
+        return req_cache
+
     # ---- lifecycle --------------------------------------------------------
     def spill(self, rid: int, req_cache, length: int,
               reserve_pages: int) -> None:
         """Write a prefilled request's content pages + state out to the host
         arena (the cold path a request takes when no slot admits it yet)."""
+        req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
         assert self.can_spill(n), f"host arena full (need {n} pages)"
         assert rid not in self._table, f"request {rid} already pooled"
@@ -295,6 +317,7 @@ class PagedKVPool:
         """Hot path: a slot was free at admission, so the prefilled pages go
         straight from the prefill output into the slot — no host hop."""
         assert rid not in self._table, f"request {rid} already pooled"
+        req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
         assert self.can_reserve(reserve_pages), "admission check missing"
         flat, _ = jtu.tree_flatten_with_path(req_cache)

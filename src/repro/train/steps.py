@@ -55,6 +55,7 @@ from repro.core.lms.offload import (effective_kind, stream_layer_to_device,
                                     stream_layer_to_host)
 from repro.launch.mesh import dp_axes, mesh_axis_sizes
 from repro.models.model import Model
+from repro.models import kvquant
 from repro.models.sharding import sharding_env, rules_without, spec as mkspec
 from repro.optim.adamw import (OPTIMIZERS, AdamState, SGDState,
                                adamw_slice_update, clip_by_global_norm,
@@ -779,7 +780,7 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
 
 
 def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
-                           rules=None):
+                           rules=None, kv_dtype: str = "model"):
     """Fixed-shape slot-batched decode step for the continuous-batching
     serve engine: `shape.global_batch` is the SLOT count, `shape.seq_len`
     the per-slot cache capacity. Each call advances every active slot one
@@ -787,6 +788,11 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     join by mutating the (donated) cache and the positions/active vectors,
     never the compiled computation, so join/evict churn costs zero
     recompilation.
+
+    kv_dtype="int8": the full-history attn k/v cache leaves are int8 codes
+    with per-row f32 scale leaves (models/kvquant.py) — the decode step then
+    expects the transformed tree (the paged pool's device arena) and
+    apply_layer_decode_slots quantizes each new token's k/v row on write.
 
     -> (fn(params, cache, batch, positions, active) -> (logits [B,V],
     new_cache), params_sh, batch_sh, cache_sh). positions [B] int32 per-slot
@@ -809,7 +815,10 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     # cache (= the pool's device arena) is always device-resident here,
     # whatever the plan says about the kvcache CLASS (which covers the
     # spilled backlog, not the active working set)
-    _, cspecs = model.cache_abstract(shape, mesh, rules=rules)
+    cavals, cspecs = model.cache_abstract(shape, mesh, rules=rules)
+    if kvquant.validate_kv_dtype(kv_dtype) == "int8":
+        cavals, cspecs = kvquant.quantize_cache_abstract(
+            cavals, cspecs, shape.seq_len)
     cache_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s), cspecs,
         is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,117 @@
+"""Flash-decode Pallas kernel (interpret mode) vs the dense jnp oracle:
+slot-batched kv_len vectors (incl. empty slots), GQA ratios, block sizes,
+int8 KV pages with per-row scales, and the q_offset threading regression
+for the prefill kernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.decode_kernel import flash_decode_fwd
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import (flash_attention_ref,
+                                               flash_decode_ref)
+from repro.kernels.quantize.ref import quantize_ref
+
+
+def _inputs(b, h, kh, smax, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, smax, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, smax, kh, d)), jnp.float32)
+    return q, k, v
+
+
+def _quant(x):
+    d = x.shape[-1]
+    q, s = quantize_ref(jnp.reshape(x, (-1, d)))
+    return q.reshape(x.shape), s.reshape(x.shape[:-1])
+
+
+CASES = [
+    # b, h, kh, smax, d, block_k, kv_lens
+    (3, 8, 2, 128, 64, 32, [0, 37, 128]),
+    (2, 4, 4, 64, 32, 64, [1, 64]),          # MHA, full + single token
+    (2, 8, 1, 96, 16, 32, [95, 13]),         # MQA, non-multiple smax
+    (4, 6, 3, 256, 64, 128, [5, 100, 200, 256]),
+    (1, 2, 2, 30, 8, 16, [29]),              # tiny, ragged tail block
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_decode_vs_oracle(case):
+    b, h, kh, smax, d, bk, kv_lens = case
+    q, k, v = _inputs(b, h, kh, smax, d, seed=hash(case[:5]) % 2**31)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    out = flash_decode_fwd(q, k, v, kvl, block_k=bk, interpret=True)
+    ref = flash_decode_ref(q, k, v, kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:3])
+def test_flash_decode_int8_vs_oracle(case):
+    """int8 pages: the kernel's fused dequantize must match the dense
+    oracle over the same codes+scales to float tolerance (atol-tight: the
+    only difference is accumulation order)."""
+    b, h, kh, smax, d, bk, kv_lens = case
+    q, k, v = _inputs(b, h, kh, smax, d, seed=1 + hash(case[:5]) % 2**31)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    k8, ks = _quant(k)
+    v8, vs = _quant(v)
+    out = flash_decode_fwd(q, k8, v8, kvl, k_scale=ks, v_scale=vs,
+                           block_k=bk, interpret=True)
+    ref = flash_decode_ref(q, k8, v8, kvl, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # and the quantization error itself stays bounded vs the f32 oracle
+    f32 = flash_decode_ref(q, k, v, kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f32),
+                               atol=0.05, rtol=0.05)
+
+
+def test_flash_decode_empty_slots_are_zero():
+    q, k, v = _inputs(2, 4, 2, 64, 32, seed=3)
+    kvl = jnp.asarray([0, 0], jnp.int32)
+    out = flash_decode_fwd(q, k, v, kvl, block_k=32, interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_flash_decode_scalar_vs_vector_kv_len():
+    q, k, v = _inputs(3, 4, 2, 64, 32, seed=4)
+    out_s = flash_decode_fwd(q, k, v, 40, block_k=32, interpret=True)
+    out_v = flash_decode_fwd(q, k, v, jnp.full((3,), 40, jnp.int32),
+                             block_k=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_v))
+
+
+def test_flash_decode_numerical_stability():
+    """Large logits must not overflow the online softmax."""
+    b, h, kh, smax, d = 1, 2, 2, 64, 32
+    q = jnp.full((b, h, d), 30.0, jnp.float32)
+    k = jnp.full((b, smax, kh, d), 30.0, jnp.float32)
+    v = jnp.ones((b, smax, kh, d), jnp.float32)
+    out = flash_decode_fwd(q, k, v, smax, block_k=32, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("q_offset", [0, 5, 32])
+def test_flash_attention_q_offset(q_offset):
+    """Regression: q_offset used to be silently dropped by the Pallas
+    dispatch — the kernel must place query row 0 at kv position q_offset,
+    matching the oracle."""
+    rng = np.random.default_rng(q_offset)
+    b, h, kh, sq, skv, d = 1, 4, 2, 16, 64, 32
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kh, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kh, skv, d)), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, q_offset=q_offset,
+                              block_q=16, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    if q_offset != skv - sq:
+        legacy = flash_attention_ref(q, k, v, causal=True)  # align-to-end
+        assert not np.allclose(np.asarray(out), np.asarray(legacy),
+                               atol=1e-3), "q_offset had no effect"
