@@ -62,6 +62,8 @@ def run():
         "us_per_call": (wall / max(m["decode_tokens"], 1)) * 1e6,
         "derived": f"decode={m['decode_tok_s']:.1f}tok/s "
                    f"ttft={m.get('ttft_mean_s', 0)*1e3:.0f}ms "
+                   f"tpot={m.get('tpot_p50_s', 0)*1e3:.1f}/"
+                   f"{m.get('tpot_p95_s', 0)*1e3:.1f}ms(p50/p95) "
                    f"conc={m['mean_concurrency']:.2f} "
                    f"spilled/returned={int(m['pool_spilled_pages'])}/"
                    f"{int(m['pool_fetched_pages'] + m['pool_prefetched_pages'])} "
@@ -100,6 +102,8 @@ def run():
         "name": f"serve_engine_int8_s{SLOTS}",
         "us_per_call": (wall8 / max(m8["decode_tokens"], 1)) * 1e6,
         "derived": f"decode={m8['decode_tok_s']:.1f}tok/s "
+                   f"tpot={m8.get('tpot_p50_s', 0)*1e3:.1f}/"
+                   f"{m8.get('tpot_p95_s', 0)*1e3:.1f}ms(p50/p95) "
                    f"conc={m8['mean_concurrency']:.2f} "
                    f"page_bytes={pb_int8}/{pb_model} "
                    f"({pb_model/max(pb_int8,1):.2f}x smaller pages) "

@@ -49,6 +49,7 @@ echo "== kernel tests, forced Pallas interpret =="
 # of silently taking the reference fallback
 REPRO_PALLAS_INTERPRET=1 python -m pytest -q \
     tests/test_kernels_flash.py tests/test_kernels_flash_decode.py \
+    tests/test_kernels_flash_decode_paged.py \
     tests/test_kernels_ssd.py tests/test_kernels_misc.py
 
 echo "== tier-1 =="

@@ -122,10 +122,16 @@ class KVPagingPlan:
     """Sizing of the paged, host-spilling KV pool (serve/kvpool.py) — the
     SERVING-side executor of the kvcache residency class. A page is
     `page_size` token-positions of the whole layer stack for one slot; the
-    pool keeps active slots' pages in HBM (the decode working set), spills
-    prefilled-but-waiting requests' pages to pinned host, and fetches them
-    back when a slot frees. Admission control reserves a request's full page
-    need up front against `device_pages` (no mid-decode preemption)."""
+    pool keeps active slots' pages in a SHARED device arena addressed
+    through an int32[slots, max_pages] page table (true paged attention,
+    DESIGN.md §9), spills prefilled-but-waiting requests' pages to pinned
+    host, and maps them back with page-table pointer writes when a slot
+    frees. `device_pages` are USABLE pages: the arena physically carries
+    one extra null page (the free-slot target) and the table itself, both
+    already charged by `price_kv_paging` — the budget converts directly
+    into concurrency with no fragmentation slack, since the table makes
+    page placement irrelevant. Admission control reserves a request's full
+    page need up front against `device_pages` (no mid-decode preemption)."""
     page_size: int            # token-positions per page (whole layer stack)
     page_bytes: int           # per-device bytes of one page (paged leaves)
     state_bytes: int          # per-slot seq-independent cache bytes
@@ -470,10 +476,16 @@ def price_kv_paging(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
 
     free = budget - slots * state_bytes
     if page_bytes:
-        # at least one full-length slot must fit or serving cannot make
-        # progress; beyond slots*pages_per_slot extra pages are unusable
-        # (the device arena IS the slot-batched decode cache)
-        device_pages = max(free // page_bytes, pages_per_slot)
+        # arena overheads come off the top: the int32 page table (4 bytes
+        # per slot-page entry) and the single null page free slots point at.
+        # No fragmentation slack beyond that — under table indirection any
+        # free page serves any slot, so the budget converts directly into
+        # concurrency. At least one full-length slot must still fit or
+        # serving cannot make progress; beyond slots*pages_per_slot extra
+        # pages are unusable (no slot could ever map them)
+        table_bytes = slots * pages_per_slot * 4
+        device_pages = max((free - table_bytes) // page_bytes - 1,
+                           pages_per_slot)
         device_pages = min(device_pages, slots * pages_per_slot)
     else:
         device_pages = 0
@@ -546,8 +558,10 @@ def plan_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         class_swap["kvcache"] = 2 * paging.pages_per_slot * paging.page_bytes
         host += paging.host_pages * paging.page_bytes + \
             backlog * paging.state_bytes
-        kv_dev = paging.device_pages * paging.page_bytes + \
-            slots * paging.state_bytes
+        # +1: the arena's null page; the table is int32 per slot-page entry
+        kv_dev = (paging.device_pages + 1) * paging.page_bytes + \
+            slots * paging.state_bytes + \
+            slots * paging.pages_per_slot * 4
         notes.append(
             f"KV backlog host-resident via paged pool: {paging.device_pages} "
             f"device pages ({paging.slot_budget} concurrent slots), "

@@ -19,6 +19,21 @@ per token-position per kv head — strictly finer than per-page), and fuses
 the dequantize into the block load: HBM traffic is the int8 codes + the
 f32 row scales, ~half the bf16 cache bytes and ~quarter of f32.
 
+Paged variant (`flash_decode_paged_fwd`): the caches arrive as a shared page
+arena [P, page_size, K, D] plus an int32 page table [B, max_pages] instead
+of slot-contiguous rows (DESIGN.md §9). The table rides in as a SECOND
+scalar-prefetch operand next to kv_len, and the k/v index_maps route every
+block through it: logical block j of slot b lives at arena row
+table[b, j // bpp], block offset j % bpp (bpp = page_size // block_k, with
+block_k snapped to a divisor of page_size). The length-aware clamp happens
+in page-table space — j is clamped to the slot's last valid logical block
+BEFORE the table lookup, so out-of-range grid steps revisit the same
+physical block and keep the DMA elision. Compute masking still uses the
+UNclamped logical position, so the kernel bodies are shared verbatim with
+the contiguous variant. Free slots' table rows point at the arena's null
+page (a valid row), so kv_len == 0 slots prefetch harmlessly and return
+exact zeros like the contiguous kernel.
+
 Rows with kv_len == 0 (inactive serve slots) return exact zeros (l stays 0),
 unlike the dense oracle whose all-masked softmax degenerates to a uniform
 average — serve never reads those rows; the oracle in ref.py zeroes them to
@@ -125,6 +140,94 @@ def _fd_kernel_int8(kvl_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] /
                        jnp.maximum(l_ref[...], 1e-30)[:, None]
                        ).astype(o_ref.dtype)
+
+
+def _fd_paged_kernel(kvl_ref, tab_ref, *args, **kw):
+    # the table only steers the BlockSpec index_maps; the body's masking
+    # works in logical positions, so it is the contiguous kernel verbatim
+    _fd_kernel(kvl_ref, *args, **kw)
+
+
+def _fd_paged_kernel_int8(kvl_ref, tab_ref, *args, **kw):
+    _fd_kernel_int8(kvl_ref, *args, **kw)
+
+
+def flash_decode_paged_fwd(q, k_pages, v_pages, kv_len, page_table, *,
+                           k_scale=None, v_scale=None, block_k: int = 256,
+                           interpret: bool = False):
+    """Paged flash decode: q [B,H,D]; page arenas [P,page_size,K,D]
+    (model layout within each page); kv_len [B] int32; page_table
+    [B,max_pages] int32 arena row ids. k_scale/v_scale [P,page_size,K]
+    f32 iff the arenas hold int8 codes. Slot b's logical position p lives
+    at (page_table[b, p // page_size], p % page_size). Every table entry
+    must be a valid arena row (free slots point at the null page).
+    Returns [B,H,D] in q.dtype."""
+    b, h, d = q.shape
+    ps, kh = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    quantized = k_scale is not None
+    block_k = math.gcd(block_k, ps)     # divisor of the page, <= block_k
+    bpp = ps // block_k                 # blocks per page
+    nk = max_pages * bpp                # logical KV blocks per slot
+    sm_scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, kh, g, d)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    def kv_block(b_, h_, j, kvl, tab):
+        # clamp in page-table space: out-of-range logical blocks revisit
+        # the slot's last valid PHYSICAL block, preserving the DMA elision
+        last = jnp.maximum(pl.cdiv(kvl[b_], block_k) - 1, 0)
+        jc = jnp.minimum(j, last)
+        return (tab[b_, jc // bpp], jc % bpp, h_, 0)
+
+    def scale_block(b_, h_, j, kvl, tab):
+        p2, j2, h2, _ = kv_block(b_, h_, j, kvl, tab)
+        return (p2, j2, h2)
+
+    def q_block(b_, h_, j, kvl, tab):
+        return (b_, h_, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), q_block),
+        pl.BlockSpec((1, block_k, 1, d), kv_block),
+    ]
+    operands = [qg, k_pages]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_k, 1), scale_block))
+        operands.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, block_k, 1, d), kv_block))
+    operands.append(v_pages)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_k, 1), scale_block))
+        operands.append(v_scale)
+
+    kernel = functools.partial(
+        _fd_paged_kernel_int8 if quantized else _fd_paged_kernel,
+        sm_scale=sm_scale, block_k=block_k, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d), q_block),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len, page_table, *operands)
+    return out.reshape(b, h, d)
 
 
 def flash_decode_fwd(q, k_cache, v_cache, kv_len, *, k_scale=None,

@@ -10,9 +10,11 @@ import functools
 import jax
 
 from repro.kernels.gates import resolve_interpret, use_pallas
-from repro.kernels.flash_attention.decode_kernel import flash_decode_fwd
+from repro.kernels.flash_attention.decode_kernel import (flash_decode_fwd,
+                                                         flash_decode_paged_fwd)
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import (flash_attention_ref,
+                                               flash_decode_paged_ref,
                                                flash_decode_ref)
 
 # compat: the historical gate name, used by tests and callers
@@ -54,4 +56,26 @@ def flash_decode(q, k_cache, v_cache, kv_len, *, k_scale=None, v_scale=None,
     else:
         o = flash_decode_ref(q3, k_cache, v_cache, kv_len, k_scale=k_scale,
                              v_scale=v_scale)
+    return o[:, None] if squeeze else o
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_paged(q, k_pages, v_pages, kv_len, page_table, *,
+                       k_scale=None, v_scale=None, block_k: int = 256,
+                       interpret: bool = False):
+    """Paged flash decode: q [B,1,H,D] or [B,H,D]; page arenas
+    [P,page_size,K,D]; kv_len scalar or [B]; page_table [B,max_pages]
+    int32 arena row ids (free slots point at the null page).
+    k_scale/v_scale [P,page_size,K] iff the arenas hold int8 codes.
+    Returns q's shape."""
+    squeeze = q.ndim == 4
+    q3 = q[:, 0] if squeeze else q
+    if use_pallas(interpret):
+        o = flash_decode_paged_fwd(q3, k_pages, v_pages, kv_len, page_table,
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   block_k=block_k,
+                                   interpret=resolve_interpret(interpret))
+    else:
+        o = flash_decode_paged_ref(q3, k_pages, v_pages, kv_len, page_table,
+                                   k_scale=k_scale, v_scale=v_scale)
     return o[:, None] if squeeze else o

@@ -60,3 +60,27 @@ def flash_decode_ref(q, k_cache, v_cache, kv_len, *, k_scale=None,
     o = jnp.einsum("bkgs,bskd->bkgd", p, vf)
     o = jnp.where((kv_len > 0)[:, None, None, None], o, 0.0)
     return o.reshape(b, h, d).astype(q.dtype)
+
+
+def _gather_pages(arena, table):
+    """arena [P,ps,...] + table [B,max_pages] -> [B, max_pages*ps, ...]."""
+    g = arena[table]
+    b, mp, ps = g.shape[:3]
+    return g.reshape((b, mp * ps) + g.shape[3:])
+
+
+def flash_decode_paged_ref(q, k_pages, v_pages, kv_len, page_table, *,
+                           k_scale=None, v_scale=None):
+    """Oracle for the paged kernel: gathers each slot's pages through the
+    table back into the slot-contiguous MODEL layout and delegates to
+    `flash_decode_ref` — one oracle for both layouts. Bitwise-identical to
+    the contiguous oracle on the same logical values: positions past kv_len
+    get exact-zero softmax probabilities, so whatever the null/stale pages
+    hold cannot leak into the output."""
+    kf = _gather_pages(k_pages, page_table)
+    vf = _gather_pages(v_pages, page_table)
+    ks = vs = None
+    if k_scale is not None:
+        ks = _gather_pages(k_scale, page_table)
+        vs = _gather_pages(v_scale, page_table)
+    return flash_decode_ref(q, kf, vf, kv_len, k_scale=ks, v_scale=vs)

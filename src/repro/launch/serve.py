@@ -127,6 +127,8 @@ def main(argv=None):
     returned = int(m["pool_fetched_pages"] + m["pool_prefetched_pages"])
     print(f"served {len(results)} requests | decode {m['decode_tok_s']:.1f} "
           f"tok/s | ttft {m.get('ttft_mean_s', 0)*1e3:.1f} ms | "
+          f"tpot p50/p95 {m.get('tpot_p50_s', 0)*1e3:.1f}/"
+          f"{m.get('tpot_p95_s', 0)*1e3:.1f} ms | "
           f"concurrency {m['mean_concurrency']:.2f} | pages spilled/returned "
           f"{int(m['pool_spilled_pages'])}/{returned} "
           f"({int(m['pool_prefetched_pages'])} staged ahead)")

@@ -211,7 +211,7 @@ def dense_decode_attention(q, k_cache, v_cache, kv_len, *, k_scale=None,
 
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
-                     k_scale=None, v_scale=None):
+                     k_scale=None, v_scale=None, page_table=None):
     """Decode-attention entry (the serve hot path): q [B,1,H,D]; caches
     [B,Smax,K,D]; kv_len: count of valid slots — a scalar (whole-batch
     decode) or a [B] vector (slot-batched decode, each request at its own
@@ -219,12 +219,30 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
     recency, so kv_len covers them too. k_scale/v_scale: per-row f32 scales
     iff the caches hold int8 codes (int8 KV pages).
 
+    page_table [B,max_pages] int32: when given, the caches (and scales)
+    are a shared page arena [P,page_size,K,D] and slot b's position p lives
+    at (page_table[b, p // page_size], p % page_size) — the serve engine's
+    paged layout (DESIGN.md §9). The arena layout carries no window rings,
+    so window is rejected with a table.
+
     Dispatch: the split-KV flash-decode Pallas kernel on TPU (or under
     REPRO_FORCE_PALLAS / REPRO_PALLAS_INTERPRET) — online softmax, fused
     dequantize, length-aware blocking so a slot at position p streams ~p
-    positions, not Smax; the dense einsum elsewhere (XLA:CPU cannot lower
-    TPU Pallas natively)."""
+    positions, not Smax, the paged variant routing its BlockSpecs through
+    the table; the dense einsum elsewhere (XLA:CPU cannot lower TPU Pallas
+    natively)."""
     from repro.kernels.gates import use_pallas
+    if page_table is not None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        from repro.kernels.flash_attention.ref import flash_decode_paged_ref
+        if use_pallas():
+            return fa_ops.flash_decode_paged(q, k_cache, v_cache, kv_len,
+                                             page_table, k_scale=k_scale,
+                                             v_scale=v_scale)
+        o = flash_decode_paged_ref(q[:, 0], k_cache, v_cache, kv_len,
+                                   page_table, k_scale=k_scale,
+                                   v_scale=v_scale)
+        return o[:, None]
     if use_pallas():
         from repro.kernels.flash_attention import ops as fa_ops
         return fa_ops.flash_decode(q, k_cache, v_cache, kv_len,

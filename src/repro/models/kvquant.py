@@ -16,6 +16,12 @@ resolves the knob (`kv_dtype="int8"`), threads the transformed tree through
 `build_slot_decode_step`, and the pool quantizes prefill output at its
 boundary (spill / attach_fresh), so training and prefill numerics are
 untouched.
+
+Ordering with the page-arena transform (models/paging.py): the quantize
+transform runs FIRST in `build_slot_decode_step`, so the scale leaves it
+introduces are ordinary cache leaves by the time `page_cache_abstract`
+runs — they page into the shared arena alongside their code leaves (their
+keys are in PAGED_LEAF_KEYS and they span the cache-capacity seq axis).
 """
 from __future__ import annotations
 

@@ -195,16 +195,26 @@ class Model:
         return lm_logits(cfg, params["embed"], x), cache
 
     def decode_slots(self, params, cache, batch, positions, active,
-                     stream=None):
+                     stream=None, page_size: Optional[int] = None):
         """Slot-batched decode (serve engine): each batch row is an
         independent request. positions [B] int32 per-slot positions,
         active [B] bool slot mask (inactive rows compute but their cache is
-        held byte-stable). -> (logits [B,V], new_cache)."""
+        held byte-stable). When the cache carries a top-level "page_table"
+        leaf, the pageable k/v leaves are a shared page arena (DESIGN.md §9)
+        and `page_size` must be the arena's page length; the table rides
+        through unchanged so the jitted step can donate it in place.
+        -> (logits [B,V], new_cache)."""
         cfg = self.cfg
         x = self._embed_in(params, batch, decode=True)
         ctx = self._ctx(batch, 1)
         if cfg.family != "vlm":
             ctx["positions"] = positions[:, None]
+        cache = dict(cache)
+        table = cache.pop("page_table", None)
+        if table is not None:
+            assert page_size is not None, "paged cache needs page_size"
+            ctx["page_table"] = table
+            ctx["page_size"] = page_size
         if cfg.is_encdec:
             from repro.models.layers import sinusoidal_row
             rows = jax.vmap(lambda p: sinusoidal_row(p, cfg.d_model))(positions)
@@ -212,6 +222,8 @@ class Model:
         x, new_cache = tr.apply_decoder_decode_slots(
             cfg, params["decoder"], cache, x, positions, active, ctx,
             unroll=self.unroll, stream=stream)
+        if table is not None:
+            new_cache["page_table"] = table
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)
         return logits[:, 0], new_cache

@@ -1,0 +1,130 @@
+"""Paged-KV arena layout (true paged attention, DESIGN.md §9).
+
+The serve path stores every pageable cache leaf (full-history attention k/v
+and their int8 scale siblings) in one SHARED page arena instead of
+contiguous per-slot rows: a slot-layout leaf `[B, Smax, K, D]` becomes
+`[device_pages + 1, page_size, K, D]` (stacked: the leading `("layers",)`
+axis stays leading so the decode scan still slices it), and an
+`int32[slots, max_pages]` page table maps each slot's logical page `j` to
+an arena row. Token position `p` of slot `b` lives at
+`arena[table[b, p // page_size], p % page_size]`.
+
+Pages are thereby the unit of ADDRESSING, not just of host<->device
+transfer: the pool's attach/release become page-table edits (pointer
+writes), a returned request's pages may sit anywhere in the arena, and
+fragmentation costs nothing because no consumer ever assumes contiguity —
+the flash-decode kernel scalar-prefetches the table and routes its k/v
+BlockSpec index_maps through it (kernels/flash_attention/decode_kernel.py).
+
+The arena carries ONE extra page (`null_page`, id = device_pages): every
+free slot's table row points at it, so the decode step's per-token cache
+write always has a valid in-bounds target — inactive rows write their
+current value back into the null page (a deterministic no-op; active slots
+own disjoint pages, so no two active writes ever collide).
+
+State leaves (local-attention rings narrower than the cache, recurrent
+ssd/rglru state, encoder cross-KV) keep the wholesale per-slot layout; only
+leaves whose seq axis spans the full cache capacity page (the same
+criterion the pool applies — see PAGED_LEAF_KEYS).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# leaves that page along the seq axis (mirrors serve/kvpool.py)
+PAGED_LEAF_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+@dataclass(frozen=True)
+class PageArena:
+    """Static sizing of the shared device page arena + per-slot page table."""
+    page_size: int       # token-positions per page
+    device_pages: int    # usable pages (arena rows 0..device_pages-1)
+    slots: int           # page-table rows (= decode slots)
+    max_pages: int       # page-table width (= max_len // page_size)
+
+    @property
+    def arena_pages(self) -> int:
+        """Physical arena rows: the budgeted pages plus the null page."""
+        return self.device_pages + 1
+
+    @property
+    def null_page(self) -> int:
+        """The trash page free slots' table rows point at."""
+        return self.device_pages
+
+
+def paged_write(arena, new_t, table, positions, active, page_size: int):
+    """Write each slot's new token row through the page table.
+
+    arena [P, ps, ...]; new_t [B, 1, ...] (the decode step's one-token
+    k/v/scale row); table [B, max_pages] int32; positions/active [B].
+    Active slot b's row lands at (table[b, pos // ps], pos % ps); inactive
+    rows write their CURRENT value back into the null page their table row
+    points at — all colliding inactive writes carry the same value, so the
+    scatter stays deterministic."""
+    b = positions.shape[0]
+    pids = table[jnp.arange(b), positions // page_size]
+    rows = positions % page_size
+    cur = arena[pids, rows]
+    val = jnp.where(active.reshape((b,) + (1,) * (cur.ndim - 1)),
+                    new_t[:, 0], cur)
+    return arena.at[pids, rows].set(val)
+
+
+def gather_pages(arena, table):
+    """Assemble slot-contiguous views from the arena: arena [P, ps, ...],
+    table [B, max_pages] -> [B, max_pages * ps, ...]. The dense oracle's
+    (and tests') path from the paged layout back to the MODEL layout."""
+    g = arena[table]                       # [B, max_pages, ps, ...]
+    b, mp, ps = g.shape[:3]
+    return g.reshape((b, mp * ps) + g.shape[3:])
+
+
+def page_cache_abstract(avals, specs, max_len: int, arena: PageArena):
+    """Transform a slot-layout cache (ShapeDtypeStruct tree, PartitionSpec
+    tree) into the arena layout `PagedKVPool` builds: every paged leaf's
+    (batch, seq) plane `[B, max_len]` becomes `(arena_pages, page_size)`
+    (stacked leaves keep their leading layer axis), and — iff anything
+    paged — a replicated int32 `page_table` leaf joins the tree top-level,
+    threaded through the decode step as a donated operand.
+
+    The paging criterion is the pool's: key in PAGED_LEAF_KEYS with the
+    seq axis spanning the full capacity. Identity (and no table) on trees
+    with nothing pageable, so page-free families stay in the slot layout."""
+    from jax.sharding import PartitionSpec as P
+
+    found = [False]
+
+    def walk(a, s, stacked):
+        if not isinstance(a, dict):
+            return a, s
+        na, ns = {}, {}
+        for key, sub in a.items():
+            st = stacked or key.startswith("stack")
+            if isinstance(sub, dict):
+                na[key], ns[key] = walk(sub, s[key], st)
+                continue
+            ba = 1 if stacked else 0
+            shp = tuple(sub.shape)
+            if (key in PAGED_LEAF_KEYS and len(shp) > ba + 1
+                    and shp[ba + 1] == max_len):
+                found[0] = True
+                na[key] = jax.ShapeDtypeStruct(
+                    shp[:ba] + (arena.arena_pages, arena.page_size)
+                    + shp[ba + 2:], sub.dtype)
+                ent = tuple(s[key]) + (None,) * (len(shp) - len(tuple(s[key])))
+                ns[key] = P(*(ent[:ba] + (None, None) + ent[ba + 2:]))
+            else:
+                na[key], ns[key] = sub, s[key]
+        return na, ns
+
+    na, ns = walk(avals, specs, False)
+    if found[0]:
+        na["page_table"] = jax.ShapeDtypeStruct(
+            (arena.slots, arena.max_pages), jnp.int32)
+        ns["page_table"] = P()
+    return na, ns

@@ -16,6 +16,7 @@ from repro.core.lms.offload import stream_layer_to_device
 from repro.core.lms.policies import tag
 from repro.models import attention as attn_mod
 from repro.models import kvquant
+from repro.models import paging
 from repro.models.attention import (attention_defs, project_qkv, out_proj,
                                     decode_attention)
 from repro.models.layers import (ParamDef, apply_mlp, apply_norm, mlp_defs,
@@ -544,11 +545,50 @@ def apply_layer_decode_slots(cfg, kind, p, x, cache, positions, active, ctx):
     the token-parity property the serve engine's join/evict churn relies on.
     """
     b = x.shape[0]
+    table = ctx.get("page_table")
+    ps = ctx.get("page_size")
+    # paged criterion, static and identical to the pool/builder shape rule
+    # (a leaf pages iff its seq axis spans the full cache capacity): full
+    # attention always pages when a table is present; a local_attn ring
+    # pages only when its window covers the whole capacity (the ring never
+    # wraps), i.e. its cache width == max_len == max_pages * page_size.
+    cap = table.shape[1] * ps if table is not None else 0
+
     if kind in ("attn", "local_attn"):
         h = apply_norm(cfg, p.get("ln1", {}), x)
         q, k, v = project_qkv(cfg, p["attn"], h)
         q, k = _rope_qk(cfg, q, k, ctx)
         window = cfg.window if kind == "local_attn" else 0
+        if table is not None and (window == 0 or window >= cap):
+            # paged arena layout (DESIGN.md §9): the new token's row is
+            # written THROUGH the page table — no per-slot cache region
+            # exists; kv_len masking makes stale page contents unreadable
+            arena_axes = (None, None, "kv_heads", None)
+            kv_len = jnp.where(active, jnp.minimum(positions + 1, cap), 0)
+            scales = {}
+            if "k_scale" in cache:
+                scale_axes = (None, None, "kv_heads")
+                k, ks = kvquant.quantize_kv_leaf(k)
+                v, vs = kvquant.quantize_kv_leaf(v)
+                scales["k_scale"] = paging.paged_write(
+                    constrain(cache["k_scale"], *scale_axes), ks, table,
+                    positions, active, ps)
+                scales["v_scale"] = paging.paged_write(
+                    constrain(cache["v_scale"], *scale_axes), vs, table,
+                    positions, active, ps)
+            ck = paging.paged_write(constrain(cache["k"], *arena_axes), k,
+                                    table, positions, active, ps)
+            cv = paging.paged_write(constrain(cache["v"], *arena_axes), v,
+                                    table, positions, active, ps)
+            ck = constrain(ck, *arena_axes)
+            cv = constrain(cv, *arena_axes)
+            o = decode_attention(q, ck, cv, kv_len,
+                                 k_scale=scales.get("k_scale"),
+                                 v_scale=scales.get("v_scale"),
+                                 page_table=table)
+            x = x + out_proj(cfg, p["attn"], o)
+            x, _ = _ffn(cfg, p, x)
+            return x, {"k": ck, "v": cv, **scales}
         smax = cache["k"].shape[1]
         slots = (positions % smax) if window else jnp.minimum(positions, smax - 1)
         cache_axes = ("batch", "kv_seq", "kv_heads", None)
@@ -579,6 +619,25 @@ def apply_layer_decode_slots(cfg, kind, p, x, cache, positions, active, ctx):
     if kind == "xattn":
         h = apply_norm(cfg, p.get("ln1", {}), x)
         q, k, v = project_qkv(cfg, p["attn"], h)
+        if table is not None:
+            # the decoder self-attention k/v of an encdec layer page like
+            # full attention; the encoder cross-KV (xk/xv) stays wholesale
+            kv_len = jnp.where(active, jnp.minimum(positions + 1, cap), 0)
+            ck = paging.paged_write(cache["k"], k, table, positions,
+                                    active, ps)
+            cv = paging.paged_write(cache["v"], v, table, positions,
+                                    active, ps)
+            o = decode_attention(q, ck, cv, kv_len, page_table=table)
+            x = x + out_proj(cfg, p["attn"], o)
+            hx = apply_norm(cfg, p.get("lnx", {}), x)
+            q2 = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"])
+            if "bq" in p["xattn"]:
+                q2 = q2 + p["xattn"]["bq"]
+            o2 = decode_attention(q2, cache["xk"], cache["xv"],
+                                  cache["xk"].shape[1])
+            x = x + out_proj(cfg, p["xattn"], o2)
+            x, _ = _ffn(cfg, p, x)
+            return x, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
         smax = cache["k"].shape[1]
         slots = jnp.minimum(positions, smax - 1)
         ck = _slot_write(cache["k"], k, slots, active)

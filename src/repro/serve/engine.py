@@ -29,7 +29,9 @@ import numpy as np
 
 from repro.config.base import ShapeConfig
 from repro.core.lms.planner import MemoryPlan
+from repro.models import kvquant
 from repro.models.model import Model
+from repro.models.paging import PageArena
 from repro.serve.batching import (decode_step_batch, request_prefill_batch,
                                   request_prompt_len)
 from repro.serve.kvpool import PagedKVPool
@@ -55,15 +57,16 @@ class ServeEngine:
         # kv_dtype resolution: explicit arg > the planner's priced knob >
         # model width. int8 halves the page budget bytes and the pinned-host
         # arena (pool boundary quantization + per-row scales, DESIGN.md §8).
+        # The priced knob is VALIDATED, not pattern-matched: any dtype the
+        # planner prices is honored, and an unknown one raises instead of
+        # silently degrading to model width.
         if kv_dtype is None:
-            kv_dtype = (paging.kv_dtype if paging is not None
-                        and paging.kv_dtype == "int8" else "model")
+            kv_dtype = (kvquant.validate_kv_dtype(paging.kv_dtype)
+                        if paging is not None else "model")
         self.kv_dtype = kv_dtype
 
-        shape = ShapeConfig("serve_slots", "decode", max_len, slots)
-        (self._decode_fn, params_sh, _,
-         cache_sh) = build_slot_decode_step(model, shape, mesh, plan=plan,
-                                            donate=True, kv_dtype=kv_dtype)
+        # page-arena geometry must be settled BEFORE the step builds: the
+        # decode step's cache signature is the arena layout + page table
         if paging is not None:
             page_size = paging.page_size
             device_pages = (paging.device_pages if device_pages is None
@@ -73,13 +76,22 @@ class ServeEngine:
         # the page grid must tile the cache exactly (see PagedKVPool):
         # snap a non-dividing request down to the largest page size that does
         page_size = math.gcd(max_len, page_size)
-        full = slots * max(-(-max_len // page_size), 1)
+        max_pages = max(-(-max_len // page_size), 1)
+        full = slots * max_pages
         device_pages = full if device_pages is None else device_pages
         host_pages = 2 * full if host_pages is None else host_pages
         # state-arena depth comes from the plan's priced backlog when there
         # is one (host_pages alone cannot size it for page-free families)
         host_slots = (paging.host_slots if paging is not None
                       and paging.host_slots else 2 * slots)
+        arena = PageArena(page_size=page_size, device_pages=device_pages,
+                          slots=slots, max_pages=max_pages)
+
+        shape = ShapeConfig("serve_slots", "decode", max_len, slots)
+        (self._decode_fn, params_sh, _,
+         cache_sh) = build_slot_decode_step(model, shape, mesh, plan=plan,
+                                            donate=True, kv_dtype=kv_dtype,
+                                            arena=arena)
         self.pool = PagedKVPool(model, slots=slots, max_len=max_len,
                                 page_size=page_size,
                                 device_pages=device_pages,
@@ -151,9 +163,13 @@ class ServeEngine:
     def _first_token(self, req: Request, row: np.ndarray, t0: float) -> None:
         req.tokens.append(self._select(req, row))
         req.prefilled = True
+        now = time.monotonic()
         # TTFT is relative to the request's own arrival when the trace
-        # carries one (a streaming workload), else to trace start
-        req.ttft_s = time.monotonic() - (req.arrival or t0)
+        # carries one (a streaming workload), else to trace start; a trace
+        # timed from zero (arrival == 0.0) is a legitimate arrival, so the
+        # unset check is `is None`, never truthiness
+        req.ttft_s = now - (t0 if req.arrival is None else req.arrival)
+        req.first_tok_mono = now
 
     def _done(self, req: Request) -> bool:
         return (len(req.tokens) >= req.max_new
@@ -195,6 +211,7 @@ class ServeEngine:
                 if self._done(head):
                     # max_new=1 / eos on the prefill token: finished without
                     # ever needing a slot or pages
+                    head.done_mono = time.monotonic()
                     sched.finished.append(head)
                     progressed = True
                     continue
@@ -213,6 +230,7 @@ class ServeEngine:
             cache1, row = self._prefill(req)
             self._first_token(req, row, t0)
             if self._done(req):
+                req.done_mono = time.monotonic()
                 sched.queue.remove(req)
                 sched.finished.append(req)
                 progressed = True
@@ -252,6 +270,7 @@ class ServeEngine:
             tok = self._select(r, rows[s])
             r.tokens.append(tok)
             if self._done(r):
+                r.done_mono = time.monotonic()
                 self.scheduler.finish(s)
                 self.pool.release(r.rid)
                 released = True
@@ -270,7 +289,8 @@ class ServeEngine:
         ids}. Per-request TTFT and engine throughput land in `metrics()`."""
         t0 = time.monotonic()
         for r in requests:
-            r.arrival = r.arrival or t0
+            if r.arrival is None:
+                r.arrival = t0
             self.scheduler.submit(r)
         while self.scheduler.has_work():
             progressed = self._admit(t0)
@@ -302,5 +322,13 @@ class ServeEngine:
             tt = [r.ttft_s for r in fin if r.ttft_s is not None]
             out["ttft_mean_s"] = float(np.mean(tt)) if tt else 0.0
             out["ttft_p95_s"] = (float(np.percentile(tt, 95)) if tt else 0.0)
+            # TPOT: per-request decode cadence — wall time from the first
+            # token to completion over the tokens generated after it
+            tp = [(r.done_mono - r.first_tok_mono) / (len(r.tokens) - 1)
+                  for r in fin
+                  if r.first_tok_mono is not None and r.done_mono is not None
+                  and len(r.tokens) > 1]
+            out["tpot_p50_s"] = float(np.percentile(tp, 50)) if tp else 0.0
+            out["tpot_p95_s"] = float(np.percentile(tp, 95)) if tp else 0.0
         out.update({f"pool_{k}": float(v) for k, v in self.pool.stats.items()})
         return out

@@ -1,13 +1,20 @@
 """Paged, host-spilling KV-cache pool — the SERVING-side executor of the
-planner's `kvcache` residency class (DESIGN.md §7).
+planner's `kvcache` residency class (DESIGN.md §7, §9).
 
 The pool owns two arenas:
 
-* the **device arena** is the slot-batched decode cache itself (the pytree
-  `build_slot_decode_step` threads): `slots` rows of `max_len` positions.
-  A *page* is `page_size` consecutive token-positions of the WHOLE layer
-  stack for one slot, so slot `b`'s page `p` is the region
-  ``leaf[..., b, p*ps:(p+1)*ps, ...]`` of every paged leaf.
+* the **device arena** is a SHARED page pool: one
+  ``[*lead, device_pages + 1, page_size, *tail]`` buffer per paged leaf
+  (``lead`` is the stacked-layer axis when present), addressed through an
+  ``int32[slots, max_pages]`` **page table** that lives INSIDE the cache
+  pytree (top-level ``"page_table"`` leaf) so `build_slot_decode_step`
+  donates it with the cache and the decode kernel scalar-prefetches it.
+  Slot ``b``'s token position ``p`` lives at arena row
+  ``page_table[b, p // page_size]``, offset ``p % page_size`` — pages are
+  the unit of ADDRESSING, so a slot's pages may sit anywhere in the arena
+  and attach/release are pointer writes. Row ``device_pages`` is the
+  *null page*: free slots' table rows point at it, giving the decode
+  step's inactive-row writes a harmless in-bounds target.
 * the **host arena** is a `[host_pages, ...page]` buffer per paged leaf in
   pinned host memory (`effective_kind` degrades it to ordinary memory on
   single-memory-space platforms) holding the pages of requests that have
@@ -16,23 +23,27 @@ The pool owns two arenas:
   ssd/rglru state, local-attention rings, encoder cross KV).
 
 Leaves page along the sequence axis iff they are full-history attention
-k/v (leaf key "k"/"v" with the cache-capacity sequence dim); everything
-else moves wholesale as per-slot state.
+k/v (leaf key in PAGED_LEAF_KEYS with the cache-capacity sequence dim);
+everything else moves wholesale as per-slot state through `_write_block`.
+Paged leaves NEVER take that slot-copy path: there is no per-slot region
+to repack — ``stats["repack_pages"]`` stays 0 by construction and the
+fragmentation tests assert on it.
 
 Lifecycle: ``spill`` writes a prefilled request's content pages out to the
-host arena; ``prefetch`` stages them back into device memory while decode
-ticks run (the double buffer — the copy overlaps compute, and ``attach``
-then consumes the staged block without waiting); ``attach`` packs the pages
-into a freed slot's rows; ``release`` returns a finished request's page
-reservation. Admission arithmetic: a request RESERVES
+host arena; ``prefetch`` claims the request's device pages and scatters
+its content pages straight into the arena while decode ticks run (the
+double buffer — the copy overlaps compute); ``attach`` then only EDITS the
+page table (plus the wholesale state writes) — zero page copies for a
+staged request; ``release`` nulls the slot's table row and returns its
+pages to the free list. Admission arithmetic: a request RESERVES
 ``pages_needed(prompt + max_new)`` device pages up front (no mid-decode
 preemption); spill only moves the ``ceil(prompt/page_size)`` content pages
-that actually hold keys — the gap grows as the request decodes into its
-reservation.
+that actually hold keys — the request decodes into the rest of its
+reserved (already-mapped) pages.
 
-The pool tracks the device budget in *pages* (`device_pages`, priced by
-`price_kv_paging`); `resident_pages + staged_pages <= device_pages` is the
-invariant `can_reserve` enforces for the engine's admission control."""
+The free list is LIFO, so churn deliberately scrambles page placement —
+fragmentation is free under table indirection, and the tests keep it that
+way by asserting token parity over non-contiguous tables."""
 from __future__ import annotations
 
 import functools
@@ -47,10 +58,9 @@ import numpy as np
 from repro import compat
 from repro.core.lms.offload import DEVICE, HOST, effective_kind
 from repro.models import kvquant
+from repro.models.paging import PAGED_LEAF_KEYS
 
-# leaves that page along the seq axis: full-history attn k/v, plus their
-# per-row scale siblings when the pool stores int8 pages
-PAGED_LEAF_KEYS = ("k", "v", "k_scale", "v_scale")
+__all__ = ["PagedKVPool", "PAGED_LEAF_KEYS"]
 
 
 def _path_keys(path) -> Tuple[str, ...]:
@@ -74,6 +84,7 @@ class _Entry:
     host_ids: Optional[np.ndarray] = None
     host_state_id: Optional[int] = None
     slot: Optional[int] = None
+    dev_ids: Optional[np.ndarray] = None   # arena rows owned (staged/dev)
     staged: Dict[Tuple[str, ...], jax.Array] = field(default_factory=dict)
 
 
@@ -82,11 +93,21 @@ def _scatter(arena, ids, pages):
     return arena.at[ids].set(pages)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("stacked",))
+def _scatter_arena(arena, ids, pages, *, stacked):
+    """Scatter page-major pages [n, *lead, ps, *tail] into the device arena
+    [*lead, P, ps, *tail] at rows `ids` (donated in-place update)."""
+    if stacked:
+        return arena.at[:, ids].set(jnp.moveaxis(pages, 0, 1))
+    return arena.at[ids].set(pages)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=("axis",))
 def _write_block(cache_leaf, block, slot, *, axis):
     """In-place (donated) write of one slot's block; `block` already carries
-    a singleton batch axis at `axis` so ranks line up."""
+    a singleton batch axis at `axis` so ranks line up. STATE leaves only —
+    paged leaves have no per-slot region (the page table addresses them)."""
     starts = [0] * cache_leaf.ndim
     starts[axis] = slot
     return jax.lax.dynamic_update_slice(cache_leaf, block, tuple(starts))
@@ -101,27 +122,27 @@ class PagedKVPool:
         if max_len % page_size:
             raise ValueError(
                 f"page_size={page_size} must divide max_len={max_len}: a "
-                "ragged tail page would make spill's page reshape and "
-                "attach's contiguous write disagree about the content width")
+                "ragged tail page would make spill's page reshape and the "
+                "page table's fixed width disagree about the content extent")
         self.slots, self.max_len, self.page_size = slots, max_len, page_size
         self.device_pages = device_pages
+        self.max_pages = max_len // page_size
+        self.null_page = device_pages
         self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
-        self.cache = model.init_cache(slots, max_len)
+        base = model.init_cache(slots, max_len)
         if self.kv_dtype == "int8":
             # int8 KV pages: attn k/v leaves become codes + per-row scale
             # leaves — both arenas (device AND pinned host) store the
             # compact format, halving the page budget bytes at fixed
             # concurrency (DESIGN.md §8)
-            self.cache = kvquant.quantize_cache_tree(self.cache, max_len)
-        if cache_sharding is not None:
-            self.cache = jax.device_put(self.cache, cache_sharding)
+            base = kvquant.quantize_cache_tree(base, max_len)
         host_slots = host_slots if host_slots is not None else max(
-            host_pages // max(-(-max_len // page_size), 1), 1)
+            host_pages // max(self.max_pages, 1), 1)
 
         self._info: Dict[Tuple[str, ...], _LeafInfo] = {}
         self._host: Dict[Tuple[str, ...], jax.Array] = {}
         hk = effective_kind(HOST)
-        flat, _ = jtu.tree_flatten_with_path(self.cache)
+        flat, _ = jtu.tree_flatten_with_path(base)
         for path, leaf in flat:
             keys = _path_keys(path)
             stacked = keys[0].startswith("stack")
@@ -137,7 +158,32 @@ class PagedKVPool:
                 shape = (host_slots,) + lead + rest
             self._host[keys] = compat.to_memory_kind(
                 jnp.zeros(shape, leaf.dtype), hk)
+        self.has_paged = any(i.paged for i in self._info.values())
 
+        # device arena: paged leaves shed their per-slot rows for the shared
+        # [*lead, device_pages + 1, page_size, *tail] page pool (+1 = the
+        # null page); state leaves keep the slot-batched layout
+        def to_arena(path, leaf):
+            info = self._info[_path_keys(path)]
+            if not info.paged:
+                return leaf
+            ba = info.batch_axis
+            return jnp.zeros(leaf.shape[:ba]
+                             + (device_pages + 1, page_size)
+                             + leaf.shape[ba + 2:], leaf.dtype)
+
+        self.cache = jtu.tree_map_with_path(to_arena, base)
+        self._tab_sharding = None
+        if self.has_paged:
+            self._ptab = np.full((slots, self.max_pages), self.null_page,
+                                 np.int32)
+            self.cache["page_table"] = jnp.asarray(self._ptab)
+            if cache_sharding is not None:
+                self._tab_sharding = cache_sharding["page_table"]
+        if cache_sharding is not None:
+            self.cache = jax.device_put(self.cache, cache_sharding)
+
+        self._free_dev: List[int] = list(range(device_pages))
         self._free_host_pages: List[int] = list(range(host_pages))
         self._free_host_slots: List[int] = list(range(host_slots))
         self._table: Dict[int, _Entry] = {}
@@ -145,11 +191,15 @@ class PagedKVPool:
         self._staged = 0            # prefetched pages counted against budget
         self.stats = {"spilled_pages": 0, "fetched_pages": 0,
                       "prefetched_pages": 0, "direct_pages": 0,
-                      "peak_resident_pages": 0, "spilled_requests": 0}
+                      "peak_resident_pages": 0, "spilled_requests": 0,
+                      # paged-leaf slot-repack copies: structurally zero
+                      # under table indirection — the regression tripwire
+                      # the fragmentation tests assert on
+                      "repack_pages": 0}
 
     # ---- admission arithmetic --------------------------------------------
     def pages_needed(self, total_len: int) -> int:
-        if not any(i.paged for i in self._info.values()):
+        if not self.has_paged:
             return 0
         return -(-min(total_len, self.max_len) // self.page_size)
 
@@ -158,7 +208,7 @@ class PagedKVPool:
         return self._resident
 
     def can_reserve(self, n_pages: int) -> bool:
-        return self._resident + self._staged + n_pages <= self.device_pages
+        return n_pages <= len(self._free_dev)
 
     def can_spill(self, content_pages: int) -> bool:
         return (len(self._free_host_pages) >= content_pages
@@ -186,26 +236,45 @@ class PagedKVPool:
                 block.reshape((L, n, ps) + block.shape[2:]), 1, 0)
         return block.reshape((n, ps) + block.shape[1:])
 
-    def _from_pages(self, pages, info: _LeafInfo):
-        """[n, *lead, ps, *rest] -> [*lead, n*ps, *rest]."""
-        if info.stacked:
-            n, L, ps = pages.shape[:3]
-            return jnp.moveaxis(pages, 0, 1).reshape(
-                (L, n * ps) + pages.shape[3:])
-        n, ps = pages.shape[:2]
-        return pages.reshape((n * ps,) + pages.shape[2:])
-
     def _write_slot(self, keys, block, slot: int):
-        """Write one leaf's block into the device arena at `slot` (donated
-        in-place update; the cache dict entry is swapped for the new
-        buffer)."""
+        """Write one STATE leaf's block into its slot row (donated in-place
+        update; the cache dict entry is swapped for the new buffer)."""
         info = self._info[keys]
+        assert not info.paged, "paged leaves are addressed via the table"
         block = block[(slice(None),) * info.batch_axis + (None,)]
         node = self.cache
         for k in keys[:-1]:
             node = node[k]
         node[keys[-1]] = _write_block(node[keys[-1]], block,
                                       jnp.int32(slot), axis=info.batch_axis)
+
+    def _write_arena(self, keys, ids: np.ndarray, pages):
+        """Scatter page-major pages into one paged leaf's device arena rows."""
+        info = self._info[keys]
+        node = self.cache
+        for k in keys[:-1]:
+            node = node[k]
+        node[keys[-1]] = _scatter_arena(node[keys[-1]],
+                                        jnp.asarray(ids, jnp.int32),
+                                        pages, stacked=info.stacked)
+
+    def _sync_table(self):
+        """Push the numpy master page table to the device cache leaf."""
+        t = jnp.asarray(self._ptab)
+        if self._tab_sharding is not None:
+            t = jax.device_put(t, self._tab_sharding)
+        self.cache["page_table"] = t
+
+    def _map_slot(self, slot: int, dev_ids: Optional[np.ndarray]):
+        """Point a slot's table row at its arena pages (unmapped logical
+        pages stay on the null page)."""
+        if not self.has_paged:
+            return
+        row = np.full((self.max_pages,), self.null_page, np.int32)
+        if dev_ids is not None and len(dev_ids):
+            row[:len(dev_ids)] = dev_ids
+        self._ptab[slot] = row
+        self._sync_table()
 
     def _ingest(self, req_cache):
         """Prefill output enters the pool at model width; int8 pools
@@ -214,6 +283,10 @@ class PagedKVPool:
         if self.kv_dtype == "int8":
             return kvquant.quantize_cache_tree(req_cache, self.max_len)
         return req_cache
+
+    def _claim_dev(self, n: int) -> np.ndarray:
+        assert n <= len(self._free_dev), "device arena page budget exceeded"
+        return np.asarray([self._free_dev.pop() for _ in range(n)], np.int32)
 
     # ---- lifecycle --------------------------------------------------------
     def spill(self, rid: int, req_cache, length: int,
@@ -252,58 +325,66 @@ class PagedKVPool:
         self.stats["spilled_requests"] += 1
 
     def prefetch(self, rid: int) -> bool:
-        """Stage a spilled request's pages back into device memory ahead of
-        its slot attach — the double buffer: issued before the decode tick's
-        dispatch, the copies overlap the tick's compute, and the later
-        attach consumes the staged blocks without waiting. Staged pages
-        count against the device budget. No-op unless the request is
-        host-resident and the budget admits it."""
+        """Claim a spilled request's device pages and scatter its content
+        pages straight into the arena ahead of its slot attach — the double
+        buffer: issued before the decode tick's dispatch, the copies overlap
+        the tick's compute, and the later attach is then a pure page-table
+        edit (plus wholesale state writes). The FULL reservation's pages are
+        claimed here so the attach can never find the budget stolen from
+        under a staged request. No-op unless the request is host-resident
+        and the budget admits it."""
         e = self._table.get(rid)
         if e is None or e.where != "host":
             return False
-        # the FULL reservation is claimed at prefetch time so the later
-        # attach can never find the budget stolen from under a staged
-        # request
         if not self.can_reserve(e.reserve_pages):
             return False
+        e.dev_ids = self._claim_dev(e.reserve_pages)
         dk = effective_kind(DEVICE)
         for keys, info in self._info.items():
             if info.paged:
                 if e.content_pages == 0:
                     continue
-                gathered = self._host[keys][jnp.asarray(e.host_ids)]
+                pages = compat.to_memory_kind(
+                    self._host[keys][jnp.asarray(e.host_ids)], dk)
+                self._write_arena(keys, e.dev_ids[:e.content_pages], pages)
             else:
-                gathered = self._host[keys][e.host_state_id]
-            e.staged[keys] = compat.to_memory_kind(gathered, dk)
+                e.staged[keys] = compat.to_memory_kind(
+                    self._host[keys][e.host_state_id], dk)
         self._staged += e.reserve_pages
         e.where = "staged"
         self.stats["prefetched_pages"] += int(e.content_pages)
         return True
 
     def attach(self, rid: int, slot: int) -> None:
-        """Pack a spilled (or staged) request's pages into a free slot's
-        rows of the device arena and hand its host pages back."""
+        """Map a spilled (or staged) request into a free slot. Staged
+        requests' pages already sit in the arena, so this is ONLY a
+        page-table edit plus the wholesale state writes — zero page copies;
+        host-resident requests pay the host->arena scatter here."""
         e = self._table[rid]
         assert e.where in ("host", "staged"), e.where
-        # a staged request's full reservation already sits in _staged
-        free = 0 if e.where == "staged" else e.reserve_pages
-        assert self._resident + self._staged + free <= self.device_pages, \
-            "attach past the device page budget — admission check missing"
-        for keys, info in self._info.items():
-            if info.paged and e.content_pages == 0:
-                continue
-            if e.where == "staged":
-                src = e.staged[keys]
-            elif info.paged:
-                src = self._host[keys][jnp.asarray(e.host_ids)]
-            else:
-                src = self._host[keys][e.host_state_id]
-            block = self._from_pages(src, info) if info.paged else src
-            self._write_slot(keys, block, slot)
-        if e.where == "staged":
-            self._staged -= e.reserve_pages
-        else:
+        if e.where == "host":
+            # fetch on the spot (prefetch never ran): claim pages + scatter
+            e.dev_ids = self._claim_dev(e.reserve_pages)
+            dk = effective_kind(DEVICE)
+            for keys, info in self._info.items():
+                if info.paged:
+                    if e.content_pages == 0:
+                        continue
+                    pages = compat.to_memory_kind(
+                        self._host[keys][jnp.asarray(e.host_ids)], dk)
+                    self._write_arena(keys, e.dev_ids[:e.content_pages],
+                                      pages)
+                else:
+                    self._write_slot(
+                        keys, self._host[keys][e.host_state_id], slot)
             self.stats["fetched_pages"] += int(e.content_pages)
+        else:
+            # staged: paged leaves need NOTHING — only the state block moves
+            for keys, info in self._info.items():
+                if not info.paged:
+                    self._write_slot(keys, e.staged[keys], slot)
+            self._staged -= e.reserve_pages
+        self._map_slot(slot, e.dev_ids)
         self._free_host_pages.extend(int(i) for i in e.host_ids)
         self._free_host_slots.append(e.host_state_id)
         e.host_ids, e.host_state_id, e.staged = None, None, {}
@@ -315,28 +396,42 @@ class PagedKVPool:
     def attach_fresh(self, rid: int, slot: int, req_cache, length: int,
                      reserve_pages: int) -> None:
         """Hot path: a slot was free at admission, so the prefilled pages go
-        straight from the prefill output into the slot — no host hop."""
+        straight from the prefill output into freshly claimed arena rows —
+        no host hop — and the slot's table row is pointed at them."""
         assert rid not in self._table, f"request {rid} already pooled"
         req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
         assert self.can_reserve(reserve_pages), "admission check missing"
+        dev_ids = self._claim_dev(reserve_pages)
         flat, _ = jtu.tree_flatten_with_path(req_cache)
         for path, leaf in flat:
             keys = _path_keys(path)
             info = self._info[keys]
-            if info.paged and n == 0:
-                continue
-            width = n * self.page_size
-            block = self._content_block(leaf, info, width)
-            self._write_slot(keys, block, slot)
-        self._table[rid] = _Entry(reserve_pages, n, length, "dev", slot=slot)
+            if info.paged:
+                if n == 0:
+                    continue
+                block = self._content_block(leaf, info, n * self.page_size)
+                self._write_arena(keys, dev_ids[:n],
+                                  self._to_pages(block, info, n))
+            else:
+                self._write_slot(keys, self._content_block(leaf, info, 0),
+                                 slot)
+        self._table[rid] = _Entry(reserve_pages, n, length, "dev", slot=slot,
+                                  dev_ids=dev_ids)
+        self._map_slot(slot, dev_ids)
         self._resident += reserve_pages
         self.stats["direct_pages"] += int(n)
         self.stats["peak_resident_pages"] = max(
             self.stats["peak_resident_pages"], self._resident)
 
     def release(self, rid: int) -> None:
-        """Return a finished request's device-page reservation."""
+        """Return a finished request's pages: null the slot's table row and
+        push its arena rows back on the free list — pointer writes only."""
         e = self._table.pop(rid)
         assert e.where == "dev", f"release of non-resident request: {e.where}"
         self._resident -= e.reserve_pages
+        if e.dev_ids is not None and len(e.dev_ids):
+            self._free_dev.extend(int(i) for i in e.dev_ids)
+        if self.has_paged:
+            self._ptab[e.slot] = self.null_page
+            self._sync_table()

@@ -32,12 +32,16 @@ class Request:
     temperature: Optional[float] = None  # None -> engine default; 0 = greedy
     top_k: Optional[int] = None
     extras: Dict = field(default_factory=dict)  # vlm embeds / audio enc_embeds
-    arrival: float = 0.0
+    # None = "not timed" (engine stamps trace start); 0.0 is a REAL arrival
+    # for traces timed from zero, so the engine tests with `is None`
+    arrival: Optional[float] = None
 
     # engine-managed state
     prefilled: bool = False
     tokens: List[int] = field(default_factory=list)   # generated so far
     ttft_s: Optional[float] = None
+    first_tok_mono: Optional[float] = None   # monotonic stamp of token 0
+    done_mono: Optional[float] = None        # monotonic stamp at completion
 
 
 class Scheduler:

@@ -56,6 +56,7 @@ from repro.core.lms.offload import (effective_kind, stream_layer_to_device,
 from repro.launch.mesh import dp_axes, mesh_axis_sizes
 from repro.models.model import Model
 from repro.models import kvquant
+from repro.models import paging
 from repro.models.sharding import sharding_env, rules_without, spec as mkspec
 from repro.optim.adamw import (OPTIMIZERS, AdamState, SGDState,
                                adamw_slice_update, clip_by_global_norm,
@@ -780,7 +781,7 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
 
 
 def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
-                           rules=None, kv_dtype: str = "model"):
+                           rules=None, kv_dtype: str = "model", arena=None):
     """Fixed-shape slot-batched decode step for the continuous-batching
     serve engine: `shape.global_batch` is the SLOT count, `shape.seq_len`
     the per-slot cache capacity. Each call advances every active slot one
@@ -793,6 +794,17 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     with per-row f32 scale leaves (models/kvquant.py) — the decode step then
     expects the transformed tree (the paged pool's device arena) and
     apply_layer_decode_slots quantizes each new token's k/v row on write.
+
+    arena (models/paging.PageArena): when given, every pageable cache leaf
+    is RE-LAID into the shared page arena (DESIGN.md §9) — slot rows become
+    [arena_pages, page_size, ...] and an int32[slots, max_pages] page table
+    joins the cache tree top-level, donated with it so attach/release
+    page-table edits round-trip through the step in place. The int8
+    transform (if any) runs FIRST, so the scale leaves page too. Trees with
+    nothing pageable (recurrent-only families) transform to themselves and
+    get no table, keeping this a no-op for page-free models. Callers
+    without a pool (whole-batch parity tests, benches) omit arena and keep
+    the legacy slot-contiguous layout.
 
     -> (fn(params, cache, batch, positions, active) -> (logits [B,V],
     new_cache), params_sh, batch_sh, cache_sh). positions [B] int32 per-slot
@@ -819,16 +831,21 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     if kvquant.validate_kv_dtype(kv_dtype) == "int8":
         cavals, cspecs = kvquant.quantize_cache_abstract(
             cavals, cspecs, shape.seq_len)
+    if arena is not None:
+        cavals, cspecs = paging.page_cache_abstract(
+            cavals, cspecs, shape.seq_len, arena)
     cache_sh = compat.tree.map(
         lambda s: NamedSharding(mesh, s), cspecs,
         is_leaf=lambda x: isinstance(x, P))
 
     stream = _serving_stream(plan)
+    page_size = arena.page_size if arena is not None else None
 
     def decode(params, cache, batch, positions, active):
         with sharding_env(mesh, rules=rules):
             return model.decode_slots(params, cache, batch, positions,
-                                      active, stream=stream)
+                                      active, stream=stream,
+                                      page_size=page_size)
 
     fn = jax.jit(decode,
                  in_shardings=(params_sh, cache_sh, batch_sh, slot_sh,

@@ -1,0 +1,144 @@
+"""Paged flash-decode kernel (interpret mode) vs the oracle: scrambled
+page tables (pages deliberately non-contiguous and out of order in the
+arena), free slots parked on the null page, int8 arenas with per-row
+scales, and the bitwise paged-ref-vs-contiguous-ref equivalence that
+anchors greedy token parity across the layout refactor."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.decode_kernel import flash_decode_paged_fwd
+from repro.kernels.flash_attention.ref import (flash_decode_paged_ref,
+                                               flash_decode_ref)
+from repro.kernels.quantize.ref import quantize_ref
+
+
+def _quant(x):
+    d = x.shape[-1]
+    q, s = quantize_ref(jnp.reshape(x, (-1, d)))
+    return q.reshape(x.shape), s.reshape(x.shape[:-1])
+
+
+def _paged_inputs(b, h, kh, pages, ps, d, kv_lens, seed=0):
+    """Random q + arena, plus a per-slot table of DISTINCT scrambled pages
+    for every slot with kv_len > 0; empty slots point at the null page
+    (the arena's last row). Arena rows beyond the tables hold garbage the
+    masking must keep out of the output."""
+    rng = np.random.default_rng(seed)
+    max_pages = -(-max(kv_lens) // ps) if kv_lens else 1
+    max_pages = max(max_pages, 1)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((pages + 1, ps, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((pages + 1, ps, kh, d)), jnp.float32)
+    null = pages
+    perm = rng.permutation(pages)
+    tab = np.full((b, max_pages), null, np.int32)
+    nxt = 0
+    for i, kvl in enumerate(kv_lens):
+        need = -(-kvl // ps)
+        tab[i, :need] = perm[nxt:nxt + need]
+        nxt += need
+    return q, k, v, jnp.asarray(tab)
+
+
+CASES = [
+    # b, h, kh, pages, page_size, d, block_k, kv_lens
+    (3, 8, 2, 9, 32, 64, 32, [0, 37, 128]),
+    (2, 4, 4, 5, 16, 32, 64, [1, 64]),        # block_k snaps to page_size
+    (2, 8, 1, 12, 8, 16, 32, [61, 13]),       # tiny pages, MQA
+    (4, 6, 3, 24, 64, 64, 32, [5, 100, 200, 256]),  # several blocks per page
+    (1, 2, 2, 4, 4, 8, 4, [14]),              # ragged tail page
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_decode_paged_vs_oracle(case):
+    b, h, kh, pages, ps, d, bk, kv_lens = case
+    q, k, v, tab = _paged_inputs(b, h, kh, pages, ps, d, kv_lens,
+                                 seed=hash(case[:6]) % 2**31)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    out = flash_decode_paged_fwd(q, k, v, kvl, tab, block_k=bk,
+                                 interpret=True)
+    ref = flash_decode_paged_ref(q, k, v, kvl, tab)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:3])
+def test_flash_decode_paged_int8_vs_oracle(case):
+    b, h, kh, pages, ps, d, bk, kv_lens = case
+    q, k, v, tab = _paged_inputs(b, h, kh, pages, ps, d, kv_lens,
+                                 seed=1 + hash(case[:6]) % 2**31)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    k8, ks = _quant(k)
+    v8, vs = _quant(v)
+    out = flash_decode_paged_fwd(q, k8, v8, kvl, tab, k_scale=ks, v_scale=vs,
+                                 block_k=bk, interpret=True)
+    ref = flash_decode_paged_ref(q, k8, v8, kvl, tab, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # quantization error stays bounded vs the f32 oracle
+    f32 = flash_decode_paged_ref(q, k, v, kvl, tab)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f32),
+                               atol=0.05, rtol=0.05)
+
+
+def test_flash_decode_paged_matches_contiguous_bitwise():
+    """The layout is pure indirection: gathering scrambled pages through
+    the table and running the CONTIGUOUS oracle must equal the paged oracle
+    bit-for-bit, and the paged kernel must match the contiguous kernel's
+    oracle on the same logical values. This is the greedy-parity anchor."""
+    b, h, kh, ps, d = 3, 4, 2, 16, 32
+    kv_lens = [0, 23, 48]
+    pages = 6
+    q, k, v, tab = _paged_inputs(b, h, kh, pages, ps, d, kv_lens, seed=7)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    # slot-contiguous view gathered through the table
+    gathered_k = k[tab].reshape(b, -1, kh, d)
+    gathered_v = v[tab].reshape(b, -1, kh, d)
+    ref_contig = flash_decode_ref(q, gathered_k, gathered_v, kvl)
+    ref_paged = flash_decode_paged_ref(q, k, v, kvl, tab)
+    np.testing.assert_array_equal(np.asarray(ref_paged),
+                                  np.asarray(ref_contig))
+    out = flash_decode_paged_fwd(q, k, v, kvl, tab, block_k=16,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_contig),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_paged_empty_slots_are_zero():
+    """Free slots whose whole table row is the null page return exact
+    zeros even though the null page holds garbage."""
+    q, k, v, tab = _paged_inputs(2, 4, 2, 4, 16, 32, [0, 0], seed=11)
+    assert np.all(np.asarray(tab) == 4)         # all rows on the null page
+    kvl = jnp.asarray([0, 0], jnp.int32)
+    out = flash_decode_paged_fwd(q, k, v, kvl, tab, block_k=16,
+                                 interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_flash_decode_paged_stale_pages_do_not_leak():
+    """Positions past kv_len live in pages the slot still owns but whose
+    contents are stale garbage — amplifying them must not change the
+    output (the masking works in logical positions)."""
+    b, h, kh, pages, ps, d = 2, 4, 2, 5, 8, 16
+    kv_lens = [3, 10]
+    q, k, v, tab = _paged_inputs(b, h, kh, pages, ps, d, kv_lens, seed=13)
+    kvl = jnp.asarray(kv_lens, jnp.int32)
+    out = flash_decode_paged_fwd(q, k, v, kvl, tab, block_k=8,
+                                 interpret=True)
+    # scribble over every position >= kv_len in the slots' own pages
+    kn, vn = np.asarray(k).copy(), np.asarray(v).copy()
+    tabn = np.asarray(tab)
+    for i, kvl_i in enumerate(kv_lens):
+        for j, pid in enumerate(tabn[i]):
+            if pid == pages:
+                continue
+            for r in range(ps):
+                if j * ps + r >= kvl_i:
+                    kn[pid, r] = 1e4
+                    vn[pid, r] = -1e4
+    out2 = flash_decode_paged_fwd(q, jnp.asarray(kn), jnp.asarray(vn), kvl,
+                                  tab, block_k=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
