@@ -110,4 +110,41 @@ def run():
                    f"spilled={int(m8['pool_spilled_pages'])} "
                    f"greedy_match={match:.3f}",
     })
+
+    # faulted serve (DESIGN.md §10): the same trace with an unservable
+    # request, a zero-budget deadline, and a forced mid-decode preemption.
+    # run() must absorb all three as per-request terminal states, and the
+    # SURVIVORS stay under the same token-parity gate as the clean row.
+    from repro.runtime.inject import FaultEvent, FaultInjector, FaultPlan
+    reqsf = synth_requests(cfg, N_REQ, PROMPT, GEN, np.random.default_rng(0))
+    reqsf[3].max_new = total + 1       # unservable: rejected at submit
+    reqsf[5].deadline_s = 0.0          # expires at the first boundary
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine.tick", at=2, kind="preempt")]))
+    engf = ServeEngine(model, mesh, slots=SLOTS, max_len=total,
+                       page_size=PAGE, prefill_chunk=CHUNK, params=params,
+                       injector=inj)
+    t0 = time.monotonic()
+    resultsf = engf.run(reqsf)
+    wallf = time.monotonic() - t0
+    mf = engf.metrics()
+    survivors = [r for r in engf._last_run if r.status == "ok"]
+    f_parity = all(np.array_equal(resultsf[r.rid], static_toks[i])
+                   for i, r in enumerate(reqsf) if r.status == "ok")
+    rows.append({
+        "name": f"serve_engine_faults_s{SLOTS}",
+        "us_per_call": (wallf / max(mf["decode_tokens"], 1)) * 1e6,
+        "derived": f"decode={mf['decode_tok_s']:.1f}tok/s "
+                   f"ok={int(mf['ok'])} rejected={int(mf['rejected'])} "
+                   f"timeout={int(mf['timeout'])} "
+                   f"failed={int(mf['failed'])} "
+                   f"preempted={int(mf['preempted'])} "
+                   f"survivor_parity={'ok' if f_parity else 'MISMATCH'}",
+    })
+    if not f_parity:
+        raise AssertionError("faulted-engine survivors diverged from the "
+                             "static baseline")
+    if not (mf["rejected"] >= 1 and mf["timeout"] >= 1
+            and mf["preempted"] >= 1 and len(survivors) == N_REQ - 2):
+        raise AssertionError(f"fault drill did not exercise all paths: {mf}")
     return rows

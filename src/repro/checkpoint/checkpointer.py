@@ -3,13 +3,24 @@
 Layout:  <dir>/step_<N>/shard_<p>.npz  + manifest.json (committed LAST —
 the atomic commit point; a crash mid-save leaves no valid manifest and the
 previous checkpoint stays authoritative, which is what restart picks up).
+`all_steps` treats a torn or unparseable manifest exactly like a missing
+one, and `restore()` (latest-mode) falls back to the next-older committed
+step when a shard turns out unreadable — a half-written checkpoint can
+hide a step but never poison a restart.
 
 Resharding restore: arrays are saved with their global shape; on load they
 are re-placed under whatever mesh/shardings the *new* topology requests
 (elastic scaling after a failure: e.g. restart on a smaller data axis).
 Async: the serialize+write runs on a background thread; `wait()` joins it
 (double-buffered so training continues during the write — the paper-era
-"don't stall SGD on I/O").
+"don't stall SGD on I/O"). An async writer that dies re-raises its
+exception at the next `wait()`/`save()` — crash-during-save surfaces like
+the crash it is, it is never swallowed.
+
+Fault injection (DESIGN.md §10): sites ``ckpt.save`` (before anything is
+written) and ``ckpt.commit`` (between the shard rename and the manifest
+write — the torn-checkpoint window) drive the crash-consistency drills in
+tests/test_fault_inject.py.
 """
 from __future__ import annotations
 
@@ -19,10 +30,13 @@ import shutil
 import tempfile
 import threading
 import time
+import zipfile
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro.runtime import inject
 
 
 def _flatten(tree, prefix=""):
@@ -70,7 +84,8 @@ def _unflatten(flat: Dict[str, np.ndarray]):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True, injector=None):
         # keep=N retains the last N committed checkpoints; keep<=0 means
         # KEEP ALL (never GC). Validated here because a bad value used to
         # surface only inside _gc — where `steps[:-0]` silently deleted
@@ -81,6 +96,8 @@ class Checkpointer:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._inj = injector
         os.makedirs(directory, exist_ok=True)
 
     # ---- save ---------------------------------------------------------------
@@ -88,6 +105,7 @@ class Checkpointer:
              num_processes: int = 1, extra: Optional[dict] = None):
         """state: pytree of arrays (jax or numpy) + nested dicts."""
         self.wait()
+        inject.maybe(self._inj, "ckpt.save")
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
 
         def _write():
@@ -107,6 +125,10 @@ class Checkpointer:
             if os.path.isdir(step_dir):
                 shutil.rmtree(step_dir)
             os.rename(tmp, step_dir)
+            # the torn-checkpoint window: shards are on disk but the
+            # manifest — the commit point — is not. An injected crash here
+            # leaves exactly the state a machine death mid-save would.
+            inject.maybe(self._inj, "ckpt.commit")
             manifest = {"step": step, "time": time.time(),
                         "num_processes": num_processes,
                         "keys": sorted(flat.keys()), "extra": extra or {}}
@@ -117,7 +139,13 @@ class Checkpointer:
             self._gc()
 
         if self.async_save:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            def _guarded():
+                try:
+                    _write()
+                except BaseException as e:  # surfaces at the next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=_guarded, daemon=True)
             self._thread.start()
         else:
             _write()
@@ -126,6 +154,9 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         if self.keep <= 0:  # keep-all: steps[:-0] would delete EVERYTHING
@@ -136,12 +167,23 @@ class Checkpointer:
                           ignore_errors=True)
 
     # ---- restore ------------------------------------------------------------
+    def _manifest_path(self, name: str) -> str:
+        return os.path.join(self.dir, name, "manifest.json")
+
     def all_steps(self):
+        """COMMITTED steps only: a step directory counts iff its manifest
+        exists AND parses — a torn manifest (crash mid-commit) makes the
+        step invisible rather than a restart landmine."""
         out = []
         for name in sorted(os.listdir(self.dir)):
-            if name.startswith("step_") and \
-                    os.path.exists(os.path.join(self.dir, name, "manifest.json")):
-                out.append(int(name.split("_")[1]))
+            if not name.startswith("step_"):
+                continue
+            try:
+                with open(self._manifest_path(name)) as f:
+                    json.load(f)
+            except (OSError, json.JSONDecodeError, ValueError):
+                continue
+            out.append(int(name.split("_")[1]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -152,10 +194,33 @@ class Checkpointer:
                 process: int = 0):
         """-> (step, state, extra). With `shardings` (a matching pytree of
         NamedSharding), arrays are device_put under the new mesh — the
-        elastic-reshard path."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        elastic-reshard path.
+
+        Latest-mode restore (step=None) walks committed steps newest-first
+        and FALLS BACK past any whose shard read fails (truncated npz,
+        vanished file): restart always lands on the newest *readable*
+        committed checkpoint. An EXPLICITLY requested step still raises —
+        asking for a specific broken step is a bug, not a fault to absorb."""
+        if step is not None:
+            return self._restore_one(step, shardings=shardings,
+                                     process=process)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._restore_one(s, shardings=shardings,
+                                         process=process)
+            except (OSError, ValueError, KeyError,
+                    zipfile.BadZipFile) as e:  # truncated npz is BadZipFile
+                last_err = e
+                continue
+        raise FileNotFoundError(
+            f"no readable checkpoint in {self.dir} "
+            f"(newest failure: {last_err})")
+
+    def _restore_one(self, step: int, *, shardings=None, process: int = 0):
         step_dir = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(step_dir, "manifest.json")) as f:
             manifest = json.load(f)

@@ -15,6 +15,8 @@ import sys
 from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, ShapeConfig,
                                TrainConfig)
 from repro.configs import get_config, get_smoke_config
+from repro.runtime import (FaultEvent, FaultInjector, FaultPlan,
+                           RestartPolicy, Supervisor)
 from repro.train.trainer import Trainer
 
 
@@ -46,6 +48,24 @@ def main(argv=None):
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--log", default="")
+    # supervised mode: crash-recovery loop (restore -> reshard -> resume)
+    p.add_argument("--supervise", action="store_true",
+                   help="run under the Supervisor: on failure, restore the "
+                        "last committed checkpoint, reshard onto surviving "
+                        "devices, and resume")
+    p.add_argument("--heartbeat-dir", default="",
+                   help="heartbeat store directory (enables liveness beats)")
+    p.add_argument("--max-restarts", type=int, default=10)
+    p.add_argument("--fault-step", type=int, default=-1,
+                   help="drill: inject a fatal fault before this 0-based "
+                        "step (requires --supervise to survive it)")
+    p.add_argument("--lost-devices", type=int, default=0,
+                   help="drill: devices the injected fault takes down "
+                        "(triggers an elastic reshard on restart)")
+    p.add_argument("--fault-seed", type=int, default=-1,
+                   help="drill: sample a random FaultPlan from this seed "
+                        "(REPRO_FAULT_SEED also works) instead of "
+                        "--fault-step")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -58,13 +78,39 @@ def main(argv=None):
         learning_rate=args.lr, warmup_steps=args.warmup,
         total_steps=args.steps, microbatches=args.microbatches,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
-    trainer = Trainer(tcfg)
-
     def log(step, m):
         print(f"step {step:5d} | loss {m['loss']:.4f} | gnorm "
               f"{m['grad_norm']:.3f} | lr {m['lr']:.2e} | {m['time_s']*1e3:.0f} ms")
 
-    state, hist = trainer.train(steps=args.steps, on_step=log)
+    injector = None
+    if args.fault_step >= 0:
+        payload = ({"lost_devices": args.lost_devices}
+                   if args.lost_devices else {})
+        injector = FaultInjector(FaultPlan(
+            [FaultEvent("trainer.step", at=args.fault_step,
+                        payload=payload)]))
+    elif args.fault_seed >= 0:
+        injector = FaultInjector(FaultPlan.sample(
+            args.fault_seed, sites=("trainer.step", "ckpt.commit")))
+
+    if args.supervise:
+        sup = Supervisor(tcfg,
+                         heartbeat_dir=args.heartbeat_dir or None,
+                         policy=RestartPolicy(max_restarts=args.max_restarts,
+                                              backoff_base=0.01,
+                                              max_delay=1.0),
+                         injector=injector)
+        res = sup.run(steps=args.steps, on_step=log)
+        state, hist = res.state, res.hist
+        for note in res.notes:
+            print(f"reshard: {note}")
+        if res.restarts:
+            print(f"recovered from {res.restarts} failure(s) "
+                  f"in {res.attempts} attempts")
+    else:
+        trainer = Trainer(tcfg, heartbeat_dir=args.heartbeat_dir or None,
+                          injector=injector)
+        state, hist = trainer.train(steps=args.steps, on_step=log)
     if args.log:
         with open(args.log, "w") as f:
             json.dump(hist, f, indent=1)

@@ -1,6 +1,12 @@
 from repro.runtime.fault import (FailureDetector, Heartbeat, HeartbeatStore,
                                  RestartPolicy, StepTimer)
 from repro.runtime.elastic import ElasticDecision, replan_mesh, apply_decision
+from repro.runtime.inject import (FaultEvent, FaultInjector, FaultPlan,
+                                  InjectedFault)
+from repro.runtime.supervisor import (RestartBudgetExhausted, SupervisedResult,
+                                      Supervisor)
 
 __all__ = ["FailureDetector", "Heartbeat", "HeartbeatStore", "RestartPolicy",
-           "StepTimer", "ElasticDecision", "replan_mesh", "apply_decision"]
+           "StepTimer", "ElasticDecision", "replan_mesh", "apply_decision",
+           "FaultEvent", "FaultInjector", "FaultPlan", "InjectedFault",
+           "RestartBudgetExhausted", "SupervisedResult", "Supervisor"]

@@ -72,18 +72,55 @@ class FailureDetector:
 
 @dataclass
 class RestartPolicy:
-    """Exponential-backoff restart budget (the launcher consults this when a
-    step raises or a peer is declared dead)."""
+    """Restart budget with decorrelated-jitter backoff.
+
+    `next_delay` returns how long to sleep before the next restart, or None
+    when the budget is exhausted. With `jitter` on (the default), delays
+    follow the decorrelated-jitter rule — ``d = min(max_delay,
+    U(base, 3 * prev_d))`` with a per-policy seeded rng — so a fleet of
+    peers restarting off the same failure spreads out instead of
+    thundering-herding the checkpoint store in lockstep; ``jitter=False``
+    keeps the deterministic ``base ** restarts`` ladder.
+
+    `record_success` must be called per healthy step: after `stable_steps`
+    consecutive successes the restart budget resets, so a long-lived run
+    that hits one rough patch per day never exhausts a budget meant to
+    catch crash loops."""
     max_restarts: int = 10
     backoff_base: float = 2.0
+    max_delay: float = 300.0
+    jitter: bool = True
+    stable_steps: int = 100
+    seed: int = 0
     restarts: int = 0
+
+    def __post_init__(self):
+        import random
+        self._rng = random.Random(self.seed)
+        self._stable = 0
+        self._prev = float(self.backoff_base)
 
     def next_delay(self) -> Optional[float]:
         if self.restarts >= self.max_restarts:
             return None
-        d = min(self.backoff_base ** self.restarts, 300.0)
+        base_delay = min(self.backoff_base ** self.restarts, self.max_delay)
         self.restarts += 1
+        self._stable = 0
+        if self.jitter:
+            d = min(self.max_delay,
+                    self._rng.uniform(self.backoff_base, 3.0 * self._prev))
+        else:
+            d = base_delay
+        self._prev = d
         return d
+
+    def record_success(self, steps: int = 1) -> None:
+        """Count healthy steps; `stable_steps` in a row refunds the restart
+        budget (and re-arms the jitter walk at its base)."""
+        self._stable += steps
+        if self._stable >= self.stable_steps and self.restarts:
+            self.restarts = 0
+            self._prev = float(self.backoff_base)
 
 
 class StepTimer:

@@ -1,0 +1,150 @@
+"""Supervised training: the loop that turns the fault-tolerance PIECES
+(heartbeats + FailureDetector, RestartPolicy, elastic replanning, atomic
+checkpoints) into an actual recovery story (DESIGN.md §10).
+
+    supervise -> detect failure -> backoff -> restore last committed
+    checkpoint -> reshard onto the surviving devices -> resume
+
+The Supervisor owns a TrainConfig and repeatedly builds a Trainer from it.
+A training attempt that dies on an injected fault (the in-process stand-in
+for a lost peer / device failure) is restarted after the RestartPolicy's
+decorrelated-jitter delay; if the fault's payload says devices were lost,
+`replan_mesh` shrinks the data axis (TP is a model-correctness choice and
+never changes) and scales grad-accum microbatches so the GLOBAL batch —
+and therefore the loss trajectory — is preserved. The rebuilt Trainer's
+`resume_or_init` restores the newest committed checkpoint (including the
+data-loader position) and `device_put`s it under the NEW mesh's shardings,
+so the reshard is the checkpoint restore itself. Replayed steps reproduce
+the original batches bit-for-bit, which is what makes the crash drill's
+final-loss parity assertion meaningful.
+
+zero1 is the one mode that cannot reshard across a data-axis change: its
+optimizer shards are packed per data rank (pad_to = data size), so the
+flat layout itself depends on the axis being shrunk. The Supervisor
+refuses loudly instead of restoring garbage.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.config.base import TrainConfig
+from repro.runtime.elastic import apply_decision, replan_mesh
+from repro.runtime.fault import FailureDetector, RestartPolicy
+from repro.runtime.inject import FaultInjector, InjectedFault
+
+
+class RestartBudgetExhausted(RuntimeError):
+    """The RestartPolicy ran out of budget — the crash loop is real."""
+
+
+@dataclass
+class SupervisedResult:
+    state: object                      # final train state (on device)
+    hist: List[dict]                   # per-step metrics, replays collapsed
+    attempts: int                      # Trainer builds (1 = no failure)
+    restarts: int                      # recoveries performed
+    notes: List[str] = field(default_factory=list)   # reshard decisions
+    tcfg: Optional[TrainConfig] = None  # config after any resharding
+
+
+def _data_axis(cfg: TrainConfig) -> int:
+    axes = dict(zip(cfg.mesh.axes, cfg.mesh.shape))
+    return axes.get("data", 1) * axes.get("pod", 1)
+
+
+class Supervisor:
+    def __init__(self, tcfg: TrainConfig, *, attn_impl: str = "blockwise",
+                 process: int = 0, heartbeat_dir: Optional[str] = None,
+                 policy: Optional[RestartPolicy] = None,
+                 detector: Optional[FailureDetector] = None,
+                 injector: Optional[FaultInjector] = None,
+                 devices_available: Optional[int] = None,
+                 catch: Tuple[type, ...] = (InjectedFault,),
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.tcfg = tcfg
+        self.attn_impl = attn_impl
+        self.process = process
+        self.heartbeat_dir = heartbeat_dir
+        self.policy = policy or RestartPolicy()
+        # the detector is part of the supervision contract even though the
+        # in-process drill learns of death via the exception: real pods run
+        # `detector.check(hb.read_all(), expected)` out-of-band and feed the
+        # same restart path; tests drive it against injected dead/torn beats
+        self.detector = detector or FailureDetector()
+        self.injector = injector
+        self._devices = devices_available
+        self._catch = catch
+        self._sleep = sleep_fn
+        self.trainer = None            # current attempt's Trainer (tests peek)
+
+    def _devices_now(self) -> int:
+        if self._devices is not None:
+            return self._devices
+        import jax
+        return len(jax.devices())
+
+    def run(self, steps: Optional[int] = None,
+            on_step: Optional[Callable] = None) -> SupervisedResult:
+        """Train to completion under supervision; raises
+        RestartBudgetExhausted when the policy gives up (the last fault is
+        chained as __cause__). Never returns a partially trained result."""
+        from repro.train.trainer import Trainer   # local: avoids an import
+        # cycle (trainer -> checkpointer -> runtime package -> this module)
+        cfg = self.tcfg
+        devices = self._devices_now()
+        hist_by_step: Dict[int, dict] = {}
+        notes: List[str] = []
+        attempts = 0
+        restarts = 0
+
+        def _on_step(step: int, m: dict) -> None:
+            # replayed steps overwrite their first recording, so the merged
+            # history is one clean trajectory; each healthy step also feeds
+            # the restart budget's stability refund
+            hist_by_step[step] = m
+            self.policy.record_success()
+            if on_step is not None:
+                on_step(step, m)
+
+        while True:
+            attempts += 1
+            self.trainer = Trainer(cfg, attn_impl=self.attn_impl,
+                                   process=self.process,
+                                   heartbeat_dir=self.heartbeat_dir,
+                                   injector=self.injector)
+            try:
+                state, _ = self.trainer.train(steps=steps, on_step=_on_step)
+            except self._catch as e:
+                delay = self.policy.next_delay()
+                if delay is None:
+                    raise RestartBudgetExhausted(
+                        f"restart budget ({self.policy.max_restarts}) "
+                        f"exhausted after {attempts} attempts") from e
+                restarts += 1
+                self._sleep(delay)
+                lost = 0
+                if isinstance(e, InjectedFault):
+                    lost = int(e.event.payload.get("lost_devices", 0))
+                if lost:
+                    devices = max(devices - lost, 1)
+                    self._devices = devices
+                    dec = replan_mesh(cfg, devices)
+                    new_cfg = apply_decision(cfg, dec)
+                    if (cfg.ddl.mode == "zero1"
+                            and _data_axis(new_cfg) != _data_axis(cfg)):
+                        raise RuntimeError(
+                            "zero1 optimizer shards are packed per data "
+                            "rank (flat layout depends on the data-axis "
+                            "size): cannot reshard "
+                            f"{_data_axis(cfg)} -> {_data_axis(new_cfg)} "
+                            "data ranks; restart with ddl mode allreduce "
+                            "or restore at the original scale") from e
+                    cfg = new_cfg
+                    notes.append(dec.note)
+                continue
+            hist = [hist_by_step[k] for k in sorted(hist_by_step)]
+            return SupervisedResult(state=state, hist=hist,
+                                    attempts=attempts, restarts=restarts,
+                                    notes=notes, tcfg=cfg)

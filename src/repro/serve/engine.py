@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine (DESIGN.md §7).
+"""Continuous-batching serve engine (DESIGN.md §7, §10).
 
 One fixed-shape slot-batched decode step (`build_slot_decode_step`) serves
 every tick: finished requests are evicted and queued ones join by mutating
@@ -12,6 +12,20 @@ double-buffers their return (prefetch staged against the decode tick).
 Greedy outputs are token-identical to a static whole-batch loop: the slot
 decode math is row-independent and chunked prefill is bitwise-equal to
 whole-prompt prefill (tests/test_serve_engine.py holds both through churn).
+
+Failure is a handled state, never an exception out of `run()` (DESIGN.md
+§10): every request ends in a terminal status (`ok` / `rejected` /
+`timeout` / `cancelled` / `failed`). Unservable and load-shed requests are
+rejected at submit; per-request deadlines are enforced at every
+scheduling boundary; a stall watchdog fails stuck requests instead of
+spinning; and a deadline-risk request at the head of the queue may
+PREEMPT the youngest active slot — its pages spill back to the host arena
+through the pool and it re-queues with tokens intact, resuming
+bit-identically when re-admitted. Deadline-aware admission sheds requests
+whose latency budget the rolling TTFT/TPOT percentiles say is already
+unmeetable. A `FaultInjector` (repro.runtime.inject) can drive tick
+faults, forced preemptions, and transient pool exhaustion at
+deterministic points.
 
 Token selection is host-side: greedy argmax, or temperature/top-k sampling
 with a per-REQUEST deterministic rng (seeded by (engine seed, rid)), so a
@@ -32,6 +46,7 @@ from repro.core.lms.planner import MemoryPlan
 from repro.models import kvquant
 from repro.models.model import Model
 from repro.models.paging import PageArena
+from repro.runtime.inject import FaultInjector, InjectedFault
 from repro.serve.batching import (decode_step_batch, request_prefill_batch,
                                   request_prompt_len)
 from repro.serve.kvpool import PagedKVPool
@@ -46,12 +61,23 @@ class ServeEngine:
                  host_pages: Optional[int] = None, prefill_chunk: int = 0,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  eos_id: Optional[int] = None, params=None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None, max_queue: int = 0,
+                 stall_rounds: int = 64, watchdog_s: Optional[float] = None,
+                 preemption: bool = True,
+                 injector: Optional[FaultInjector] = None):
         cfg = model.cfg
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.slots, self.max_len = slots, max_len
         self.temperature, self.top_k = temperature, top_k
         self.seed, self.eos_id = seed, eos_id
+        # robustness knobs: stall_rounds bounds consecutive no-progress
+        # scheduler rounds before queued work is failed (the watchdog's
+        # round-count arm); watchdog_s is its wall-clock arm; preemption
+        # enables deadline-risk spill-and-requeue
+        self.stall_rounds = stall_rounds
+        self.watchdog_s = watchdog_s
+        self.preemption = preemption
+        self._inj = injector
 
         paging = plan.kv_paging if plan is not None else None
         # kv_dtype resolution: explicit arg > the planner's priced knob >
@@ -98,7 +124,8 @@ class ServeEngine:
                                 host_pages=host_pages,
                                 host_slots=host_slots,
                                 cache_sharding=cache_sh,
-                                kv_dtype=kv_dtype)
+                                kv_dtype=kv_dtype,
+                                injector=injector)
         self.params = (jax.device_put(model.init(jax.random.key(seed)),
                                       params_sh)
                        if params is None else params)
@@ -116,8 +143,9 @@ class ServeEngine:
         self._prefill_fn = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=max_len))
 
-        self.scheduler = Scheduler(slots)
+        self.scheduler = Scheduler(slots, max_queue=max_queue)
         self._rngs: Dict[int, np.random.Generator] = {}
+        self._last_run: List[Request] = []
         self._ticks = 0
         self._decode_tokens = 0
         self._decode_s = 0.0
@@ -176,13 +204,167 @@ class ServeEngine:
                 or (self.eos_id is not None and req.tokens
                     and req.tokens[-1] == self.eos_id))
 
+    # ---- lifecycle --------------------------------------------------------
+    def _retire(self, req: Request, status: str, error=None) -> None:
+        """Terminal transition: free whatever the pool still holds for the
+        request (device pages, staged blocks, or host-arena content) and
+        record the outcome."""
+        self.pool.drop(req.rid)
+        if req.done_mono is None:
+            req.done_mono = time.monotonic()
+        self.scheduler.retire(req, status, error)
+
+    def submit(self, req: Request, t0: Optional[float] = None) -> bool:
+        """Admission control. Unservable requests (capacity can never hold
+        them) and load-shed submissions (bounded queue full) are REJECTED —
+        a terminal status, not an exception — so one bad request cannot
+        take down the batch it would have shared ticks with."""
+        if req.arrival is None:
+            req.arrival = time.monotonic() if t0 is None else t0
+        total = request_prompt_len(self.cfg, req) + req.max_new
+        if total > self.max_len:
+            self._retire(req, "rejected",
+                         f"unservable: prompt+max_new={total} exceeds "
+                         f"max_len={self.max_len}")
+            return False
+        need = self.pool.pages_needed(total)
+        if need > self.pool.device_pages:
+            self._retire(req, "rejected",
+                         f"unservable: needs {need} pages, device budget is "
+                         f"{self.pool.device_pages}")
+            return False
+        if not self.scheduler.submit(req):
+            self._retire(req, "rejected",
+                         f"load shed: queue at max_queue="
+                         f"{self.scheduler.max_queue}")
+            return False
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a live request; it retires as
+        "cancelled" at the next scheduling boundary."""
+        for r in list(self.scheduler.queue) + list(
+                self.scheduler.active.values()):
+            if r.rid == rid:
+                r.cancel()
+                return True
+        return False
+
+    def _deadline(self, req: Request) -> Optional[float]:
+        if req.deadline_s is None or req.arrival is None:
+            return None
+        return req.arrival + req.deadline_s
+
+    def _est_remaining(self, req: Request) -> Optional[float]:
+        """Pessimistic remaining service time from the bounded rolling
+        latency windows (p95 TTFT for un-prefilled requests + p95 TPOT per
+        remaining token); None until the windows have samples."""
+        tpot = self.scheduler.tpot_p95()
+        if tpot is None:
+            return None
+        rem = tpot * max(req.max_new - len(req.tokens), 0)
+        if not req.prefilled:
+            ttft = self.scheduler.ttft_p95()
+            rem += ttft if ttft is not None else 0.0
+        return rem
+
+    def _sweep(self, now: float) -> None:
+        """Per-round lifecycle sweep: cancellations and blown deadlines, in
+        the queue and in the slots."""
+        sched = self.scheduler
+        for r in list(sched.queue):
+            dl = self._deadline(r)
+            if r.cancel_requested:
+                sched.queue.remove(r)
+                self._retire(r, "cancelled", "cancel requested")
+            elif dl is not None and now > dl:
+                sched.queue.remove(r)
+                self._retire(r, "timeout",
+                             f"deadline_s={r.deadline_s} blown in queue")
+        for slot, r in list(sched.active.items()):
+            dl = self._deadline(r)
+            if r.cancel_requested:
+                sched.evict(slot)
+                self._retire(r, "cancelled", "cancel requested")
+            elif dl is not None and now > dl:
+                sched.evict(slot)
+                self._retire(r, "timeout",
+                             f"deadline_s={r.deadline_s} blown mid-decode "
+                             f"after {len(r.tokens)} tokens")
+
+    def _shed_doomed(self, now: float) -> None:
+        """Deadline-aware admission: a queued request whose budget the
+        rolling percentiles say cannot be met is shed NOW ("rejected",
+        distinguishable from "timeout") instead of burning pages on a
+        response that will arrive dead."""
+        for r in list(self.scheduler.queue):
+            dl = self._deadline(r)
+            if dl is None:
+                continue
+            est = self._est_remaining(r)
+            if est is not None and now + est > dl:
+                self.scheduler.queue.remove(r)
+                self._retire(r, "rejected",
+                             f"deadline unmeetable: est {est:.3f}s remaining "
+                             f"vs {dl - now:.3f}s budget left")
+
+    # ---- preemption -------------------------------------------------------
+    def _pick_victim(self, beneficiary: Optional[Request]) -> Optional[int]:
+        """Youngest active slot (latest activation) whose deadline is no
+        tighter than the beneficiary's and that has not already been
+        preempted (bounds preemption ping-pong)."""
+        best_slot, best_seq = None, -1
+        bdl = (self._deadline(beneficiary)
+               if beneficiary is not None else None)
+        for slot, r in self.scheduler.active.items():
+            if r.preemptions >= 1:
+                continue
+            vdl = self._deadline(r)
+            if bdl is not None and vdl is not None and vdl < bdl:
+                continue
+            if r.joined_seq > best_seq:
+                best_slot, best_seq = slot, r.joined_seq
+        return best_slot
+
+    def _preempt_slot(self, slot: int) -> bool:
+        """Spill-and-requeue: the victim's decoded-so-far pages move back
+        to the host arena (exact content, via the pool), its reservation
+        frees, and it re-queues just behind the queue head with tokens
+        intact — resuming later is bit-identical to never having been
+        preempted."""
+        r = self.scheduler.active[slot]
+        cur_len = request_prompt_len(self.cfg, r) + len(r.tokens) - 1
+        if not self.pool.preempt(r.rid, cur_len):
+            return False               # host arena full: victim decodes on
+        self.scheduler.evict(slot)
+        self.scheduler.requeue(r, behind=1)
+        return True
+
+    def _maybe_preempt(self, now: float) -> None:
+        """A deadline-risk request at the head of the queue may reclaim a
+        slot + device pages from the youngest active slot."""
+        if not self.preemption or not self.scheduler.queue:
+            return
+        head = self.scheduler.queue[0]
+        dl = self._deadline(head)
+        if dl is None:
+            return
+        need = self.pool.pages_needed(
+            request_prompt_len(self.cfg, head) + head.max_new)
+        staged = self.pool.status(head.rid) == "staged"
+        if (self.scheduler.free_slot() is not None
+                and (staged or self.pool._has_dev(need))):
+            return                     # admits naturally this round
+        est = self._est_remaining(head)
+        if est is None or now + est <= dl:
+            return                     # no evidence of deadline risk yet
+        victim = self._pick_victim(head)
+        if victim is not None:
+            self._preempt_slot(victim)
+
     # ---- scheduling -------------------------------------------------------
     def _reserve_need(self, req: Request) -> int:
         total = request_prompt_len(self.cfg, req) + req.max_new
-        if total > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new={total} exceeds the "
-                f"engine's max_len={self.max_len}")
         return self.pool.pages_needed(total)
 
     def _admit(self, t0: float) -> bool:
@@ -194,10 +376,6 @@ class ServeEngine:
         while sched.queue:
             head = sched.queue[0]
             need = self._reserve_need(head)
-            if need > pool.device_pages:
-                raise RuntimeError(
-                    f"request {head.rid} needs {need} pages but the device "
-                    f"budget is {pool.device_pages}: unservable")
             slot = sched.free_slot()
             staged = pool.status(head.rid) in ("staged",)
             if slot is None or not (staged or pool.can_reserve(need)):
@@ -212,7 +390,7 @@ class ServeEngine:
                     # max_new=1 / eos on the prefill token: finished without
                     # ever needing a slot or pages
                     head.done_mono = time.monotonic()
-                    sched.finished.append(head)
+                    sched.retire(head, "ok")
                     progressed = True
                     continue
                 pool.attach_fresh(head.rid, slot, cache1,
@@ -232,7 +410,7 @@ class ServeEngine:
             if self._done(req):
                 req.done_mono = time.monotonic()
                 sched.queue.remove(req)
-                sched.finished.append(req)
+                sched.retire(req, "ok")
                 progressed = True
                 continue
             pool.spill(req.rid, cache1, plen, self._reserve_need(req))
@@ -248,8 +426,31 @@ class ServeEngine:
                 return
 
     # ---- decode -----------------------------------------------------------
+    def _fail_active(self, reason: str) -> None:
+        """Batch-level fault: every active request retires as "failed"
+        (its pool entry freed) and serving continues with the queue."""
+        for slot, r in list(self.scheduler.active.items()):
+            self.scheduler.evict(slot)
+            self._retire(r, "failed", reason)
+
     def _tick(self) -> None:
+        # injected tick faults fire BEFORE dispatch (a donated cache is
+        # never left half-consumed): "raise" fails the active batch in
+        # place of crashing run(); "preempt" forces a spill-and-requeue of
+        # the youngest slot — the deterministic mid-decode preemption drill
+        if self._inj is not None:
+            try:
+                ev = self._inj.check("engine.tick")
+            except InjectedFault as e:
+                self._fail_active(str(e))
+                return
+            if ev is not None and ev.kind == "preempt":
+                victim = self._pick_victim(None)
+                if victim is not None:
+                    self._preempt_slot(victim)
         active = self.scheduler.active
+        if not active:
+            return
         b = self.slots
         toks = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
@@ -284,32 +485,66 @@ class ServeEngine:
         self._decode_tokens += len(active)
 
     # ---- driver -----------------------------------------------------------
+    def _fail_queued(self, reason: str) -> None:
+        sched = self.scheduler
+        while sched.queue:
+            r = sched.queue.popleft()
+            self._retire(r, "failed", reason)
+
     def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
         """Serve a request trace to completion; -> {rid: generated token
-        ids}. Per-request TTFT and engine throughput land in `metrics()`."""
+        ids} for EVERY terminal request (non-ok requests carry whatever
+        tokens they produced; check `Request.status`). Never raises for a
+        per-request failure. Per-request TTFT and engine throughput land
+        in `metrics()`."""
         t0 = time.monotonic()
         for r in requests:
-            if r.arrival is None:
-                r.arrival = t0
-            self.scheduler.submit(r)
+            self.submit(r, t0)
+        idle_rounds = 0
+        last_progress = time.monotonic()
         while self.scheduler.has_work():
+            now = time.monotonic()
+            self._sweep(now)
+            self._shed_doomed(now)
+            self._maybe_preempt(now)
             progressed = self._admit(t0)
+            if progressed:
+                last_progress = time.monotonic()
             if not self.scheduler.active:
-                if not progressed:
-                    raise RuntimeError(
-                        "serving stalled: queue non-empty but nothing "
-                        "admits (host arena too small for one request?)")
+                if progressed:
+                    idle_rounds = 0
+                    continue
+                # stall watchdog: nothing active, nothing admits — give
+                # transient conditions (injected exhaustion, arena churn)
+                # stall_rounds chances, then fail the stuck work instead of
+                # spinning forever or raising out of run()
+                idle_rounds += 1
+                stalled_wall = (self.watchdog_s is not None
+                                and now - last_progress > self.watchdog_s)
+                if idle_rounds > self.stall_rounds or stalled_wall:
+                    self._fail_queued(
+                        "stalled: queue non-empty but nothing admits "
+                        "(host arena too small for one request?)")
                 continue
+            idle_rounds = 0
             self._prefetch_next()
             self._tick()
+            last_progress = time.monotonic()
         self._wall_s = time.monotonic() - t0
-        return {r.rid: np.asarray(r.tokens, np.int32)
-                for r in self.scheduler.finished}
+        done = self.scheduler.drain()
+        for r in done:
+            self._rngs.pop(r.rid, None)
+        self._last_run = done
+        return {r.rid: np.asarray(r.tokens, np.int32) for r in done}
 
     def metrics(self) -> Dict[str, float]:
-        fin = self.scheduler.finished
+        sched = self.scheduler
         out = {
-            "requests": float(len(fin)),
+            # all-time terminal requests; per-status counters alongside.
+            # finished Requests themselves are DRAINED each run — only the
+            # bounded latency windows and these counters persist, so a
+            # long-lived engine's footprint stays flat
+            "requests": float(sched.served_total),
             "ticks": float(self._ticks),
             "decode_tokens": float(self._decode_tokens),
             "decode_tok_s": (self._decode_tokens / self._decode_s
@@ -318,17 +553,15 @@ class ServeEngine:
                                  if self._ticks else 0.0),
             "wall_s": getattr(self, "_wall_s", 0.0),
         }
-        if fin:
-            tt = [r.ttft_s for r in fin if r.ttft_s is not None]
-            out["ttft_mean_s"] = float(np.mean(tt)) if tt else 0.0
-            out["ttft_p95_s"] = (float(np.percentile(tt, 95)) if tt else 0.0)
-            # TPOT: per-request decode cadence — wall time from the first
-            # token to completion over the tokens generated after it
-            tp = [(r.done_mono - r.first_tok_mono) / (len(r.tokens) - 1)
-                  for r in fin
-                  if r.first_tok_mono is not None and r.done_mono is not None
-                  and len(r.tokens) > 1]
-            out["tpot_p50_s"] = float(np.percentile(tp, 50)) if tp else 0.0
-            out["tpot_p95_s"] = float(np.percentile(tp, 95)) if tp else 0.0
+        for k, v in sched.counters.items():
+            out[k] = float(v)
+        tt = list(sched.ttft_window)
+        if tt:
+            out["ttft_mean_s"] = float(np.mean(tt))
+            out["ttft_p95_s"] = float(np.percentile(tt, 95))
+        tp = list(sched.tpot_window)
+        if tp:
+            out["tpot_p50_s"] = float(np.percentile(tp, 50))
+            out["tpot_p95_s"] = float(np.percentile(tp, 95))
         out.update({f"pool_{k}": float(v) for k, v in self.pool.stats.items()})
         return out

@@ -117,7 +117,7 @@ class PagedKVPool:
     def __init__(self, model, *, slots: int, max_len: int, page_size: int,
                  device_pages: int, host_pages: int,
                  host_slots: Optional[int] = None, cache_sharding=None,
-                 kv_dtype: str = "model"):
+                 kv_dtype: str = "model", injector=None):
         cfg = model.cfg
         if max_len % page_size:
             raise ValueError(
@@ -189,9 +189,14 @@ class PagedKVPool:
         self._table: Dict[int, _Entry] = {}
         self._resident = 0          # reserved device pages (active slots)
         self._staged = 0            # prefetched pages counted against budget
+        # deterministic fault injection (DESIGN.md §10): "exhaust" events at
+        # pool.reserve / pool.spill make the budget checks report full
+        self._inj = injector
         self.stats = {"spilled_pages": 0, "fetched_pages": 0,
                       "prefetched_pages": 0, "direct_pages": 0,
                       "peak_resident_pages": 0, "spilled_requests": 0,
+                      "preempted_requests": 0, "preempted_pages": 0,
+                      "injected_exhaustions": 0,
                       # paged-leaf slot-repack copies: structurally zero
                       # under table indirection — the regression tripwire
                       # the fragmentation tests assert on
@@ -207,12 +212,29 @@ class PagedKVPool:
     def resident_pages(self) -> int:
         return self._resident
 
-    def can_reserve(self, n_pages: int) -> bool:
+    def _has_dev(self, n_pages: int) -> bool:
         return n_pages <= len(self._free_dev)
 
-    def can_spill(self, content_pages: int) -> bool:
+    def _has_host(self, content_pages: int) -> bool:
         return (len(self._free_host_pages) >= content_pages
                 and len(self._free_host_slots) >= 1)
+
+    def can_reserve(self, n_pages: int) -> bool:
+        """Admission check. An injected "exhaust" at pool.reserve reports
+        the device budget transiently full — only HERE, never in the
+        internal invariants, so an armed event cannot abort an operation
+        the caller already admitted."""
+        if self._inj is not None and self._inj.wants("pool.reserve",
+                                                     "exhaust"):
+            self.stats["injected_exhaustions"] += 1
+            return False
+        return self._has_dev(n_pages)
+
+    def can_spill(self, content_pages: int) -> bool:
+        if self._inj is not None and self._inj.wants("pool.spill", "exhaust"):
+            self.stats["injected_exhaustions"] += 1
+            return False
+        return self._has_host(content_pages)
 
     def status(self, rid: int) -> Optional[str]:
         """"host" | "staged" | "dev" | None (not pooled)."""
@@ -295,7 +317,7 @@ class PagedKVPool:
         arena (the cold path a request takes when no slot admits it yet)."""
         req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
-        assert self.can_spill(n), f"host arena full (need {n} pages)"
+        assert self._has_host(n), f"host arena full (need {n} pages)"
         assert rid not in self._table, f"request {rid} already pooled"
         ids = np.asarray([self._free_host_pages.pop()
                           for _ in range(n)], np.int32)
@@ -336,7 +358,7 @@ class PagedKVPool:
         e = self._table.get(rid)
         if e is None or e.where != "host":
             return False
-        if not self.can_reserve(e.reserve_pages):
+        if not self._has_dev(e.reserve_pages):
             return False
         e.dev_ids = self._claim_dev(e.reserve_pages)
         dk = effective_kind(DEVICE)
@@ -401,7 +423,7 @@ class PagedKVPool:
         assert rid not in self._table, f"request {rid} already pooled"
         req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
-        assert self.can_reserve(reserve_pages), "admission check missing"
+        assert self._has_dev(reserve_pages), "admission check missing"
         dev_ids = self._claim_dev(reserve_pages)
         flat, _ = jtu.tree_flatten_with_path(req_cache)
         for path, leaf in flat:
@@ -433,5 +455,85 @@ class PagedKVPool:
         if e.dev_ids is not None and len(e.dev_ids):
             self._free_dev.extend(int(i) for i in e.dev_ids)
         if self.has_paged:
+            self._ptab[e.slot] = self.null_page
+            self._sync_table()
+
+    def _cache_leaf(self, keys):
+        node = self.cache
+        for k in keys[:-1]:
+            node = node[k]
+        return node[keys[-1]]
+
+    def preempt(self, rid: int, length: int) -> bool:
+        """Spill-and-requeue preemption (DESIGN.md §10): reclaim an ACTIVE
+        request's device pages for a deadline-risk request. Its
+        ``pages_needed(length)`` content pages (the tokens decoded so far)
+        gather from the arena back into the host arena, its per-slot state
+        moves wholesale, its table row nulls, and its whole reservation
+        returns to the free list. The entry reverts to "host" exactly as if
+        it had been spilled post-prefill at the new length, so a later
+        attach resumes decoding bit-identically. -> False (no-op) when the
+        host arena can't hold the content — the caller must not requeue."""
+        e = self._table[rid]
+        assert e.where == "dev", f"preempt of non-resident request: {e.where}"
+        n = self.pages_needed(length)
+        if not self._has_host(n):
+            return False
+        slot = e.slot
+        ids = np.asarray([self._free_host_pages.pop()
+                          for _ in range(n)], np.int32)
+        sid = self._free_host_slots.pop()
+        hk = effective_kind(HOST)
+        for keys, info in self._info.items():
+            leaf = self._cache_leaf(keys)
+            if info.paged:
+                if n == 0:
+                    continue
+                rows = jnp.asarray(e.dev_ids[:n], jnp.int32)
+                pages = leaf[:, rows] if info.stacked else leaf[rows]
+                if info.stacked:
+                    pages = jnp.moveaxis(pages, 1, 0)   # -> page-major
+                self._host[keys] = _scatter(
+                    self._host[keys], jnp.asarray(ids),
+                    compat.to_memory_kind(pages, hk))
+            else:
+                state = leaf[:, slot] if info.stacked else leaf[slot]
+                self._host[keys] = _scatter(
+                    self._host[keys], jnp.asarray([sid], jnp.int32),
+                    compat.to_memory_kind(state[None], hk))
+        self._resident -= e.reserve_pages
+        self._free_dev.extend(int(i) for i in e.dev_ids)
+        if self.has_paged:
+            self._ptab[slot] = self.null_page
+            self._sync_table()
+        e.where, e.slot, e.dev_ids = "host", None, None
+        e.host_ids, e.host_state_id = ids, sid
+        e.content_pages, e.length = n, length
+        self.stats["preempted_requests"] += 1
+        self.stats["preempted_pages"] += int(n)
+        # preempted content re-enters via attach/prefetch, which count it as
+        # fetched: book it as spilled so spilled == fetched + prefetched
+        # stays an invariant under preemption too
+        self.stats["spilled_pages"] += int(n)
+        return True
+
+    def drop(self, rid: int) -> None:
+        """Free EVERYTHING a request holds, wherever it is — the terminal
+        path for cancelled / timed-out / failed requests (release() is the
+        happy path and insists on device residency)."""
+        e = self._table.pop(rid, None)
+        if e is None:
+            return
+        if e.where == "dev":
+            self._resident -= e.reserve_pages
+        elif e.where == "staged":
+            self._staged -= e.reserve_pages
+        if e.dev_ids is not None and len(e.dev_ids):
+            self._free_dev.extend(int(i) for i in e.dev_ids)
+        if e.host_ids is not None and len(e.host_ids):
+            self._free_host_pages.extend(int(i) for i in e.host_ids)
+        if e.host_state_id is not None:
+            self._free_host_slots.append(e.host_state_id)
+        if e.where == "dev" and self.has_paged:
             self._ptab[e.slot] = self.null_page
             self._sync_table()

@@ -1,5 +1,5 @@
 """Continuous-batching request scheduler: a FIFO admission queue over a
-fixed set of decode slots.
+fixed set of decode slots, with request lifecycles and bounded bookkeeping.
 
 Admission is two-phase, both gated by the planner-priced page budget the
 pool enforces (DESIGN.md §7):
@@ -10,11 +10,22 @@ pool enforces (DESIGN.md §7):
   2. *slot admission* — the head of the queue joins a free decode slot only
      when the pool can reserve its FULL page need (prompt + max_new tokens,
      rounded up to pages) against the device page budget. Reservation up
-     front means an admitted request can never be preempted mid-decode by
-     its own cache growth.
+     front means an admitted request is never evicted by its own cache
+     growth — the only mid-decode eviction is an explicit PREEMPTION
+     (spill-and-requeue, DESIGN.md §10), which re-queues it intact.
 
-The scheduler is pure bookkeeping (queue/slots/active); the byte-level
-admission checks live in the pool, and the engine ties the two together."""
+Request state machine (DESIGN.md §10):
+
+    queued -> active -> ok | timeout | failed | cancelled
+    queued -> rejected | timeout | cancelled | failed
+    active -> queued            (preemption: pages spilled, tokens kept)
+
+Terminal requests land in `finished`, which the ENGINE drains at the end
+of each `run()` (results returned, per-request latency samples folded into
+bounded rolling windows, counters bumped) — a long-lived engine never
+accumulates every request it ever served. The scheduler is pure
+bookkeeping (queue/slots/lifecycle); byte-level admission checks live in
+the pool, and the engine ties the two together."""
 from __future__ import annotations
 
 import collections
@@ -22,6 +33,9 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
+
+# terminal request statuses; "queued"/"active" are the live states
+TERMINAL = ("ok", "rejected", "timeout", "cancelled", "failed")
 
 
 @dataclass
@@ -35,24 +49,64 @@ class Request:
     # None = "not timed" (engine stamps trace start); 0.0 is a REAL arrival
     # for traces timed from zero, so the engine tests with `is None`
     arrival: Optional[float] = None
+    # latency budget in seconds from arrival; None = no deadline. Blowing
+    # it terminates the request as "timeout" (partial tokens kept); the
+    # engine's deadline-aware admission may pre-reject a request whose
+    # budget its latency percentiles say is already unmeetable.
+    deadline_s: Optional[float] = None
 
     # engine-managed state
+    status: str = "queued"
+    error: Optional[str] = None              # reason for a non-ok terminal
     prefilled: bool = False
     tokens: List[int] = field(default_factory=list)   # generated so far
     ttft_s: Optional[float] = None
     first_tok_mono: Optional[float] = None   # monotonic stamp of token 0
     done_mono: Optional[float] = None        # monotonic stamp at completion
+    joined_seq: int = -1                     # activation order (preemption
+                                             # picks the YOUNGEST slot)
+    preemptions: int = 0
+    cancel_requested: bool = False
+
+    def cancel(self) -> None:
+        """Ask the engine to retire this request as "cancelled" at its next
+        scheduling boundary (admission or post-tick)."""
+        self.cancel_requested = True
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL
 
 
 class Scheduler:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, *, max_queue: int = 0,
+                 stats_window: int = 512):
         self.n_slots = n_slots
+        # 0 = unbounded; >0 bounds the admission queue — submissions beyond
+        # it are load-shed ("rejected") instead of growing latency unboundedly
+        self.max_queue = max_queue
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.finished: List[Request] = []
+        self.finished: List[Request] = []   # terminal, awaiting engine drain
+        self._join_seq = 0
+        # bounded rolling windows + cumulative counters survive the drain:
+        # percentile stats stay available to a long-lived engine without
+        # retaining the Request objects themselves
+        self.ttft_window: Deque[float] = collections.deque(maxlen=stats_window)
+        self.tpot_window: Deque[float] = collections.deque(maxlen=stats_window)
+        self.counters: Dict[str, int] = {k: 0 for k in TERMINAL}
+        self.counters["preempted"] = 0
+        self.served_total = 0               # all-time terminal requests
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; False = load-shed (queue at max_queue), in which
+        case the CALLER retires it as rejected (the scheduler never decides
+        terminal states on its own)."""
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            return False
+        req.status = "queued"
         self.queue.append(req)
+        return True
 
     def free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
@@ -66,14 +120,68 @@ class Scheduler:
 
     def activate(self, req: Request, slot: int) -> None:
         assert self.slots[slot] is None, f"slot {slot} occupied"
+        req.status = "active"
+        req.joined_seq = self._join_seq
+        self._join_seq += 1
         self.slots[slot] = req
 
-    def finish(self, slot: int) -> Request:
+    def evict(self, slot: int) -> Request:
+        """Clear a slot WITHOUT retiring the request (preemption / terminal
+        handling decide its next state)."""
         req = self.slots[slot]
         assert req is not None, f"slot {slot} empty"
         self.slots[slot] = None
-        self.finished.append(req)
         return req
+
+    def requeue(self, req: Request, *, behind: int = 1) -> None:
+        """Put a preempted request back in the queue, tokens intact.
+        `behind=1` places it just BEHIND the head — never in front of the
+        deadline-risk beneficiary it yielded its pages to, but ahead of
+        everyone else so its latency damage stays minimal."""
+        req.status = "queued"
+        req.preemptions += 1
+        self.counters["preempted"] += 1
+        self.queue.insert(min(behind, len(self.queue)), req)
+
+    def retire(self, req: Request, status: str,
+               error: Optional[str] = None) -> None:
+        """Move a request to its terminal state and the finished list."""
+        assert status in TERMINAL, status
+        req.status = status
+        req.error = error
+        self.counters[status] += 1
+        self.served_total += 1
+        self.finished.append(req)
+
+    def finish(self, slot: int) -> Request:
+        """Normal completion of an active request."""
+        req = self.evict(slot)
+        self.retire(req, "ok")
+        return req
+
+    def drain(self) -> List[Request]:
+        """Hand the terminal requests to the engine and forget them,
+        folding their latency samples into the rolling windows first."""
+        done = self.finished
+        self.finished = []
+        for r in done:
+            if r.ttft_s is not None:
+                self.ttft_window.append(r.ttft_s)
+            if (r.first_tok_mono is not None and r.done_mono is not None
+                    and len(r.tokens) > 1):
+                self.tpot_window.append(
+                    (r.done_mono - r.first_tok_mono) / (len(r.tokens) - 1))
+        return done
+
+    def ttft_p95(self) -> Optional[float]:
+        if not self.ttft_window:
+            return None
+        return float(np.percentile(list(self.ttft_window), 95))
+
+    def tpot_p95(self) -> Optional[float]:
+        if not self.tpot_window:
+            return None
+        return float(np.percentile(list(self.tpot_window), 95))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)

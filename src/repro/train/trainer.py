@@ -1,6 +1,14 @@
 """Training loop: LMS-planned, DDL-reduced steps + async checkpointing,
 heartbeats, straggler stats, and crash-restart (resume from the latest
 committed checkpoint, including the data-iterator position).
+
+A `FaultInjector` (repro.runtime.inject) threads through the loop for the
+crash-recovery drills: site ``trainer.step`` fires before each step
+dispatch (the simulated lost-peer / XLA abort the Supervisor catches),
+``heartbeat`` can drop or tear the per-step beat (what the
+FailureDetector sees from a dying process), and the injector passes into
+the Checkpointer for the mid-save crash windows. All hooks are no-ops
+when no injector is installed.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ from repro.data import DataLoader, SyntheticTokens, make_vlm_batch, make_audio_b
 from repro.launch.mesh import make_mesh, mesh_axis_sizes
 from repro.models.model import Model
 from repro.runtime import HeartbeatStore, StepTimer
+from repro.runtime import inject
 from repro.train.steps import (build_train_step, init_train_state,
                                build_zero1_train_step, init_zero1_state,
                                TrainState)
@@ -26,7 +35,8 @@ from repro.train.steps import (build_train_step, init_train_state,
 
 class Trainer:
     def __init__(self, tcfg: TrainConfig, *, attn_impl: str = "blockwise",
-                 process: int = 0, heartbeat_dir: Optional[str] = None):
+                 process: int = 0, heartbeat_dir: Optional[str] = None,
+                 injector=None):
         self.tcfg = tcfg
         self.mesh = make_mesh(tcfg.mesh)
         self.model = Model(tcfg.model, attn_impl=attn_impl)
@@ -35,8 +45,10 @@ class Trainer:
                                  microbatches=tcfg.microbatches)
                      if tcfg.lms.enabled else None)
         self.process = process
+        self._inj = injector
         self.ckpt = Checkpointer(tcfg.checkpoint_dir,
-                                 async_save=tcfg.async_checkpoint)
+                                 async_save=tcfg.async_checkpoint,
+                                 injector=injector)
         self.hb = HeartbeatStore(heartbeat_dir) if heartbeat_dir else None
         self.timer = StepTimer()
         sizes = mesh_axis_sizes(self.mesh)
@@ -123,6 +135,10 @@ class Trainer:
         metrics_hist = []
         for i in range(start, steps):
             self.timer.start()
+            # the crash drill's kill point: fires BEFORE the step dispatch,
+            # so the step that dies was never applied — exactly the state a
+            # lost peer leaves behind
+            inject.maybe(self._inj, "trainer.step")
             batch = self._make_batch()
             state, metrics = self.step_fn(state, batch)
             loss = float(metrics["loss"])   # sync point
@@ -135,13 +151,29 @@ class Trainer:
                                  "ce": float(metrics["ce"]),
                                  "aux": float(metrics["aux"])})
             if self.hb:
-                self.hb.beat(self.process, i + 1, dt)
+                self._beat(i + 1, dt)
             if on_step:
                 on_step(i + 1, metrics_hist[-1])
             if (i + 1) % self.tcfg.checkpoint_every == 0 or i + 1 == steps:
                 self.save(i + 1, state)
         self.ckpt.wait()
         return state, metrics_hist
+
+    def _beat(self, step: int, dt: float):
+        """Heartbeat with injectable failure modes: "dead" drops the beat
+        entirely (the process looks gone to the FailureDetector after its
+        timeout); "torn" writes an unparseable file in its place (a beat
+        torn mid-write — read_all treats it as missing this round)."""
+        ev = self._inj.poke("heartbeat") if self._inj is not None else None
+        if ev is not None and ev.kind == "dead":
+            return
+        if ev is not None and ev.kind == "torn":
+            import os
+            with open(os.path.join(self.hb.dir,
+                                   f"hb_{self.process}.json"), "w") as f:
+                f.write('{"process": ')  # torn mid-write
+            return
+        self.hb.beat(self.process, step, dt)
 
     def save(self, step: int, state):
         if self.zero1:

@@ -85,6 +85,47 @@ def test_async_save_waits(tmpdir):
     assert ck.latest_step() == 5
 
 
+def test_torn_manifest_is_invisible(tmpdir):
+    """A manifest that exists but does not PARSE (crash mid-commit after
+    the rename was scheduled) must hide the step exactly like a missing
+    manifest — a torn file is not a commit."""
+    ck = Checkpointer(tmpdir, async_save=False)
+    ck.save(1, _state(1))
+    ck.save(2, _state(2))
+    with open(os.path.join(tmpdir, "step_00000002", "manifest.json"), "w") as f:
+        f.write('{"step": 2, "keys": [')          # torn mid-write
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    step, restored, _ = ck.restore()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(_state(1)["params"]["w"]))
+
+
+def test_restore_falls_back_past_unreadable_shard(tmpdir):
+    """A committed step whose shard is unreadable (truncated npz) must not
+    brick restart: latest-mode restore falls back to the next-older
+    committed step; an EXPLICIT request for the broken step still raises."""
+    ck = Checkpointer(tmpdir, keep=5, async_save=False)
+    ck.save(1, _state(1))
+    ck.save(2, _state(2))
+    shard = os.path.join(tmpdir, "step_00000002", "shard_0.npz")
+    with open(shard, "r+b") as f:
+        f.truncate(16)                            # partial write
+    step, restored, _ = ck.restore()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(_state(1)["params"]["w"]))
+    with pytest.raises(Exception):
+        ck.restore(step=2)
+    # nothing readable at all -> a clear error, not an infinite walk
+    with open(os.path.join(tmpdir, "step_00000001", "shard_0.npz"),
+              "r+b") as f:
+        f.truncate(16)
+    with pytest.raises(FileNotFoundError, match="no readable"):
+        ck.restore()
+
+
 def test_restore_specific_step(tmpdir):
     ck = Checkpointer(tmpdir, keep=5, async_save=False)
     ck.save(1, _state(1))

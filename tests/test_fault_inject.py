@@ -1,0 +1,345 @@
+"""Deterministic fault injection (DESIGN.md §10): injector mechanics, the
+serve engine's chaos drills (unservable / timeout / load shed / transient
+exhaustion / mid-decode preemption — run() never raises, survivors stay
+token-identical to a fault-free run), and checkpoint crash consistency
+(killed between shard write and manifest commit -> previous checkpoint
+stays authoritative)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.config.base import MeshSpec
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import run_static
+from repro.models.model import Model
+from repro.runtime import HeartbeatStore
+from repro.runtime.inject import (SITE_KINDS, FaultEvent, FaultInjector,
+                                  FaultPlan, InjectedFault, maybe, wants)
+from repro.serve import ServeEngine, synth_requests
+
+N_REQ, PROMPT, GEN = 5, 8, 8
+TOTAL = PROMPT + GEN
+SLOTS, PAGE, CHUNK = 2, 4, 4
+
+
+# ---------------------------------------------------------------------------
+# Injector mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="site"):
+        FaultEvent("no.such.site", at=0)
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("engine.tick", at=0, kind="meltdown")
+    with pytest.raises(ValueError):
+        FaultEvent("engine.tick", at=-1)
+    with pytest.raises(ValueError):
+        FaultEvent("engine.tick", at=0, times=0)
+
+
+def test_plan_sampling_deterministic(monkeypatch):
+    a = FaultPlan.sample(42, n=5)
+    b = FaultPlan.sample(42, n=5)
+    c = FaultPlan.sample(43, n=5)
+    assert a.events == b.events, "same seed must give the same plan"
+    assert a.events != c.events
+    for e in a.events:
+        assert e.kind in SITE_KINDS[e.site]
+    monkeypatch.setenv("REPRO_FAULT_SEED", "43")
+    assert FaultPlan.from_env(default_seed=42, n=5).events == c.events
+    monkeypatch.delenv("REPRO_FAULT_SEED")
+    assert FaultPlan.from_env(default_seed=42, n=5).events == a.events
+
+
+def test_injector_fires_at_call_index():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("pool.reserve", at=2, kind="exhaust", times=2)]))
+    hits = [inj.wants("pool.reserve", "exhaust") for _ in range(6)]
+    assert hits == [False, False, True, True, False, False]
+    assert inj.calls["pool.reserve"] == 6
+    assert [(s, c) for s, c, _ in inj.fired] == [("pool.reserve", 2),
+                                                 ("pool.reserve", 3)]
+
+
+def test_check_raises_and_carries_event():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("trainer.step", at=1, payload={"lost_devices": 2})]))
+    assert inj.check("trainer.step") is None
+    with pytest.raises(InjectedFault) as ei:
+        inj.check("trainer.step")
+    assert ei.value.site == "trainer.step"
+    assert ei.value.call == 1
+    assert ei.value.event.payload["lost_devices"] == 2
+    # module-level helpers no-op without an injector
+    assert maybe(None, "trainer.step") is None
+    assert wants(None, "pool.reserve", "exhaust") is False
+
+
+# ---------------------------------------------------------------------------
+# Engine chaos drills
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b")
+    mesh = make_mesh(MeshSpec((1, 1), ("data", "model")))
+    model = Model(cfg, attn_impl="naive")
+    rng = np.random.default_rng(7)
+    reqs = synth_requests(cfg, N_REQ, PROMPT, GEN, rng)
+    params, static_toks, _ = run_static(model, mesh, reqs, PROMPT, GEN)
+    return cfg, mesh, model, reqs, params, static_toks
+
+
+def _fresh(reqs):
+    import copy
+    out = copy.deepcopy(reqs)
+    for r in out:
+        r.tokens, r.prefilled, r.ttft_s = [], False, None
+        r.arrival, r.first_tok_mono, r.done_mono = None, None, None
+        r.status, r.error, r.joined_seq = "queued", None, -1
+        r.preemptions, r.cancel_requested, r.deadline_s = 0, False, None
+    return out
+
+
+def _engine(model, mesh, params, **kw):
+    return ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
+                       page_size=PAGE, prefill_chunk=CHUNK, params=params,
+                       **kw)
+
+
+def _statuses(eng):
+    return {r.rid: r.status for r in eng._last_run}
+
+
+def test_unservable_request_rejected_not_raised(setup):
+    """One request that can NEVER fit (prompt+max_new > max_len) must retire
+    as "rejected" while the rest of the trace serves token-identically."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    trace = _fresh(reqs)
+    trace[2].max_new = TOTAL           # 8 + 16 > max_len=16: unservable
+    eng = _engine(model, mesh, params)
+    results = eng.run(trace)
+    st = _statuses(eng)
+    assert st[trace[2].rid] == "rejected"
+    assert "unservable" in [r for r in eng._last_run
+                            if r.rid == trace[2].rid][0].error
+    assert results[trace[2].rid].size == 0
+    for i, r in enumerate(reqs):
+        if i == 2:
+            continue
+        assert st[r.rid] == "ok"
+        assert np.array_equal(results[r.rid], static_toks[i]), \
+            f"survivor {r.rid} diverged under a rejected neighbor"
+    m = eng.metrics()
+    assert m["rejected"] == 1 and m["ok"] == N_REQ - 1
+
+
+def test_blown_deadline_times_out(setup):
+    """deadline_s=0 expires at the first scheduling boundary: the request
+    retires as "timeout" (never admitted) and everyone else is unharmed."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    trace = _fresh(reqs)
+    trace[4].deadline_s = 0.0
+    eng = _engine(model, mesh, params)
+    results = eng.run(trace)
+    st = _statuses(eng)
+    assert st[trace[4].rid] == "timeout"
+    for i, r in enumerate(reqs):
+        if i == 4:
+            continue
+        assert st[r.rid] == "ok"
+        assert np.array_equal(results[r.rid], static_toks[i])
+    assert eng.metrics()["timeout"] == 1
+
+
+def test_bounded_queue_load_sheds(setup):
+    """max_queue bounds admission: overflow submissions reject immediately
+    (backpressure), the admitted prefix serves exactly."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    eng = _engine(model, mesh, params, max_queue=2)
+    results = eng.run(_fresh(reqs))
+    st = _statuses(eng)
+    assert [st[r.rid] for r in reqs] == ["ok", "ok",
+                                        "rejected", "rejected", "rejected"]
+    for i in range(2):
+        assert np.array_equal(results[reqs[i].rid], static_toks[i])
+    shed = [r for r in eng._last_run if r.status == "rejected"]
+    assert all("load shed" in r.error for r in shed)
+
+
+def test_deadline_aware_admission_sheds_unmeetable(setup):
+    """With latency percentiles saying a deadline cannot be met, the request
+    is shed as "rejected" (distinguishable from "timeout") without burning
+    pages on it."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    eng = _engine(model, mesh, params)
+    # manufactured history: 5s TTFT, 1s/token at p95 — GEN tokens need ~13s
+    eng.scheduler.ttft_window.extend([5.0] * 8)
+    eng.scheduler.tpot_window.extend([1.0] * 8)
+    trace = _fresh(reqs)
+    trace[1].deadline_s = 2.0          # far beyond reach, not yet expired
+    results = eng.run(trace)
+    st = _statuses(eng)
+    assert st[trace[1].rid] == "rejected"
+    bad = [r for r in eng._last_run if r.rid == trace[1].rid][0]
+    assert "unmeetable" in bad.error
+    for i, r in enumerate(reqs):
+        if i == 1:
+            continue
+        assert st[r.rid] == "ok"
+        assert np.array_equal(results[r.rid], static_toks[i])
+
+
+def test_transient_pool_exhaustion_survives(setup):
+    """Injected "exhaust" at pool.reserve makes the device budget report
+    full for a few admission rounds: the engine retries instead of raising
+    or failing anyone, and the full trace still matches the static loop."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("pool.reserve", at=0, kind="exhaust", times=3)]))
+    eng = _engine(model, mesh, params, injector=inj)
+    results = eng.run(_fresh(reqs))
+    assert eng.pool.stats["injected_exhaustions"] >= 3
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], static_toks[i]), \
+            f"request {r.rid} diverged across transient exhaustion"
+    assert eng.metrics()["ok"] == N_REQ
+
+
+def test_injected_preemption_token_parity(setup):
+    """Forced mid-decode preemption: the victim's pages spill to the host
+    arena, it re-queues with tokens intact, and on re-admission resumes
+    BIT-IDENTICALLY — every request still matches the static loop."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine.tick", at=2, kind="preempt")]))
+    eng = _engine(model, mesh, params, injector=inj)
+    results = eng.run(_fresh(reqs))
+    m = eng.metrics()
+    assert m["preempted"] >= 1, "the drill must actually preempt"
+    assert eng.pool.stats["preempted_requests"] >= 1
+    assert m["ok"] == N_REQ
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], static_toks[i]), \
+            f"request {r.rid}: preemption changed greedy tokens"
+    preempted = [r for r in eng._last_run if r.preemptions > 0]
+    assert preempted and all(r.status == "ok" for r in preempted)
+    # page accounting holds under the preempt/re-attach round trip
+    st = eng.pool.stats
+    assert st["fetched_pages"] + st["prefetched_pages"] == st["spilled_pages"]
+
+
+def test_tick_fault_fails_active_batch_only(setup):
+    """An injected tick crash fails the requests that were IN the batch —
+    run() does not raise, and queued requests still serve exactly."""
+    cfg, mesh, model, reqs, params, static_toks = setup
+    inj = FaultInjector(FaultPlan([FaultEvent("engine.tick", at=1)]))
+    eng = _engine(model, mesh, params, injector=inj)
+    results = eng.run(_fresh(reqs))
+    st = _statuses(eng)
+    failed = [rid for rid, s in st.items() if s == "failed"]
+    assert len(failed) == SLOTS, "exactly the active batch fails"
+    for i, r in enumerate(reqs):
+        if r.rid in failed:
+            assert len(results[r.rid]) < GEN      # partial tokens kept
+        else:
+            assert st[r.rid] == "ok"
+            assert np.array_equal(results[r.rid], static_toks[i])
+    m = eng.metrics()
+    assert m["failed"] == SLOTS and m["ok"] == N_REQ - SLOTS
+
+
+def test_seeded_chaos_keeps_engine_invariants(setup):
+    """REPRO_FAULT_SEED-style chaos: whatever the sampled plan throws at the
+    pool and tick sites, every request reaches a terminal status, non-ok
+    terminals carry a reason, and the pool leaks nothing."""
+    cfg, mesh, model, reqs, params, _ = setup
+    plan = FaultPlan.sample(int(os.environ.get("REPRO_FAULT_SEED", "1234")),
+                            sites=("engine.tick", "pool.reserve",
+                                   "pool.spill"),
+                            n=4, horizon=8)
+    inj = FaultInjector(plan)
+    eng = _engine(model, mesh, params, injector=inj, stall_rounds=16)
+    results = eng.run(_fresh(reqs))
+    assert set(results) == {r.rid for r in reqs}, "every request terminal"
+    for r in eng._last_run:
+        assert r.terminal
+        if r.status != "ok":
+            assert r.error, f"non-ok terminal {r.rid} must carry a reason"
+    pool = eng.pool
+    assert pool._table == {}, "terminal requests must not leak pool entries"
+    assert pool.resident_pages == 0
+    assert len(pool._free_dev) == pool.device_pages
+    assert eng.scheduler.served_total == N_REQ
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint crash drills
+# ---------------------------------------------------------------------------
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 4)).astype(np.float32),
+            "step": np.int32(seed)}
+
+
+def test_ckpt_crash_before_write(tmp_path):
+    inj = FaultInjector(FaultPlan([FaultEvent("ckpt.save", at=0)]))
+    ck = Checkpointer(str(tmp_path), async_save=False, injector=inj)
+    with pytest.raises(InjectedFault):
+        ck.save(1, _state(1))
+    assert ck.latest_step() is None
+    assert not any(n.startswith("step_") for n in os.listdir(tmp_path))
+
+
+def test_ckpt_crash_between_shard_and_commit(tmp_path):
+    """The torn-checkpoint drill: the async writer dies AFTER the shard
+    rename, BEFORE the manifest commit. The error surfaces at the next
+    wait(), the torn step is invisible, and restore lands on the previous
+    committed checkpoint."""
+    inj = FaultInjector(FaultPlan([FaultEvent("ckpt.commit", at=1)]))
+    ck = Checkpointer(str(tmp_path), async_save=True, injector=inj)
+    ck.save(1, _state(1))
+    ck.wait()                                     # commit 0: clean
+    ck.save(2, _state(2))
+    with pytest.raises(InjectedFault):
+        ck.wait()                                 # commit 1: torn
+    step2 = tmp_path / "step_00000002"
+    assert (step2 / "shard_0.npz").exists(), "shards were written"
+    assert not (step2 / "manifest.json").exists(), "commit never happened"
+    assert ck.all_steps() == [1], "torn step must be invisible"
+    step, restored, _ = ck.restore()
+    assert step == 1 and int(restored["step"]) == 1
+
+
+def test_ckpt_async_error_surfaces_at_next_save(tmp_path):
+    """A dead async writer must not be swallowed by a later save()."""
+    inj = FaultInjector(FaultPlan([FaultEvent("ckpt.commit", at=0)]))
+    ck = Checkpointer(str(tmp_path), async_save=True, injector=inj)
+    ck.save(1, _state(1))
+    with pytest.raises(InjectedFault):
+        ck.save(2, _state(2))                     # wait() inside save
+
+
+def test_heartbeat_dead_and_torn_kinds(tmp_path):
+    """"dead" drops the beat; "torn" leaves an unparseable file — both look
+    like a missing process to read_all / the FailureDetector."""
+    from types import SimpleNamespace
+    from repro.runtime import FailureDetector
+    from repro.train.trainer import Trainer
+    hb = HeartbeatStore(str(tmp_path))
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("heartbeat", at=1, kind="dead"),
+        FaultEvent("heartbeat", at=2, kind="torn")]))
+    t = SimpleNamespace(hb=hb, process=0, _inj=inj)
+    Trainer._beat(t, 1, 0.1)
+    assert hb.read_all()[0].step == 1
+    Trainer._beat(t, 2, 0.1)                      # dead: dropped
+    assert hb.read_all()[0].step == 1
+    Trainer._beat(t, 3, 0.1)                      # torn: invalid json
+    assert hb.read_all() == {}
+    dead, _ = FailureDetector(timeout=60.0).check({}, expected=[0])
+    assert dead == [0]

@@ -39,10 +39,49 @@ def test_straggler_detection():
 
 
 def test_restart_backoff():
-    pol = RestartPolicy(max_restarts=3, backoff_base=2.0)
+    pol = RestartPolicy(max_restarts=3, backoff_base=2.0, jitter=False)
     delays = [pol.next_delay() for _ in range(4)]
     assert delays[:3] == [1.0, 2.0, 4.0]
     assert delays[3] is None  # budget exhausted
+
+
+def test_restart_backoff_jitter_decorrelated():
+    """Jittered delays: deterministic per seed, bounded by [base, max_delay],
+    and DIFFERENT across seeds (the whole point: peers restarting off the
+    same failure must not thundering-herd the checkpoint store)."""
+    a = RestartPolicy(max_restarts=10, backoff_base=0.5, max_delay=30.0,
+                      seed=1)
+    b = RestartPolicy(max_restarts=10, backoff_base=0.5, max_delay=30.0,
+                      seed=1)
+    c = RestartPolicy(max_restarts=10, backoff_base=0.5, max_delay=30.0,
+                      seed=2)
+    da = [a.next_delay() for _ in range(6)]
+    db = [b.next_delay() for _ in range(6)]
+    dc = [c.next_delay() for _ in range(6)]
+    assert da == db, "same seed must replay the same delays"
+    assert da != dc, "different seeds must decorrelate"
+    for d in da + dc:
+        assert 0.5 <= d <= 30.0
+
+
+def test_restart_budget_resets_after_stable_steps():
+    """`record_success`: a run that survives `stable_steps` healthy steps
+    refunds its restart budget — one rough patch a day must never exhaust
+    a budget meant for crash loops."""
+    pol = RestartPolicy(max_restarts=2, backoff_base=1.0, jitter=False,
+                        stable_steps=5)
+    assert pol.next_delay() is not None
+    assert pol.next_delay() is not None
+    assert pol.next_delay() is None          # exhausted...
+    pol.record_success(steps=4)
+    assert pol.next_delay() is None          # ...and 4 < stable_steps
+    pol.record_success(steps=1)              # 5th consecutive healthy step
+    assert pol.restarts == 0
+    assert pol.next_delay() is not None      # budget refunded
+    # a restart mid-streak zeroes the stability counter
+    pol.record_success(steps=4)
+    pol.next_delay()
+    assert pol._stable == 0
 
 
 def _tcfg(mesh):

@@ -45,6 +45,8 @@ def _fresh_requests(reqs):
     for r in out:
         r.tokens, r.prefilled, r.ttft_s = [], False, None
         r.arrival, r.first_tok_mono, r.done_mono = None, None, None
+        r.status, r.error, r.joined_seq = "queued", None, -1
+        r.preemptions, r.cancel_requested = 0, False
     return out
 
 
@@ -339,7 +341,13 @@ def test_engine_tpot_metrics(setup):
     assert m["requests"] == len(reqs)
     assert 0.0 < m["tpot_p50_s"] <= m["tpot_p95_s"]
     assert m["ttft_p95_s"] > 0.0
-    for r in eng.scheduler.finished:
+    assert m["ok"] == len(reqs)
+    # terminal requests are DRAINED from the scheduler (bounded memory);
+    # the engine keeps the most recent run's batch for inspection
+    assert eng.scheduler.finished == []
+    assert len(eng._last_run) == len(reqs)
+    for r in eng._last_run:
+        assert r.status == "ok"
         assert r.first_tok_mono is not None and r.done_mono is not None
         assert r.done_mono >= r.first_tok_mono
 
@@ -355,7 +363,7 @@ def test_engine_arrival_zero_is_preserved(setup):
     eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
                       page_size=PAGE, prefill_chunk=CHUNK, params=params)
     eng.run(trace)
-    for r in eng.scheduler.finished:
+    for r in eng._last_run:
         assert r.arrival == 0.0, "engine clobbered an explicit arrival"
         # monotonic 'now' minus 0.0 -> absolute clock scale, far above any
         # real TTFT this smoke trace could produce
