@@ -30,6 +30,7 @@ def _setup():
     return cfg, mesh, model
 
 
+# lint: waive RL005 engine.run()/run_static() block on device results internally per tick
 def run():
     from repro.launch.serve import run_static
     from repro.serve import ServeEngine, synth_requests

@@ -151,7 +151,7 @@ def main() -> None:
         REPO, f"BENCH_{'smoke' if args.smoke else 'full'}.json")
     with open(out, "w") as f:
         json.dump({"mode": "smoke" if args.smoke else "full",
-                   "unix_time": int(time.time()),
+                   "unix_time": int(time.time()),  # lint: waive RL001 record stamp is wall-clock by design
                    "failures": failures,
                    "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)", file=sys.stderr)

@@ -22,6 +22,24 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== collection check =="
 python -m pytest --collect-only -q tests/ > /dev/null
 
+echo "== static analysis: repo lint + jaxpr audit (DESIGN.md §11) =="
+# the lint pass (RLnnn rules, inline waivers) over src/repro + benchmarks;
+# any unwaived finding fails
+python -m repro.analysis.lint
+# the jaxpr auditor over EVERY step builder (train, zero1, prefill, static
+# decode, slot decode model/int8/int8+arena) + the recompile sentinel;
+# writes the machine-readable report CI uploads and Planner v2 consumes
+python -m repro.analysis.run --out analysis_report.json --skip-lint
+test -s analysis_report.json
+# pinned ruff runs in the same stage on runners that have it (the GitHub
+# workflow installs it; the dev container may not — the repo-specific
+# rules above are the primary gate either way)
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src benchmarks tests
+else
+  echo "ruff not installed; skipping (CI installs the pinned version)"
+fi
+
 echo "== bench smoke + regression gate =="
 # one retry: the measured serve rows are wall-clock and a loaded runner can
 # push a healthy row past the 25% line once; a REAL regression fails twice

@@ -129,7 +129,11 @@ class Checkpointer:
             # manifest — the commit point — is not. An injected crash here
             # leaves exactly the state a machine death mid-save would.
             inject.maybe(self._inj, "ckpt.commit")
-            manifest = {"step": step, "time": time.time(),
+            # manifest time is REPORTING (when was this checkpoint taken,
+            # comparable across hosts/restarts) — wall-clock is the point
+            manifest = {"step": step,
+                        "time": time.time(),  # lint: waive RL001 manifest timestamp is wall-clock by design
+
                         "num_processes": num_processes,
                         "keys": sorted(flat.keys()), "extra": extra or {}}
             mtmp = os.path.join(self.dir, f".manifest_{step}.tmp")

@@ -241,7 +241,10 @@ def check_schedule_invariant(residency: Dict[str, str],
                              schedule: Optional[SwapSchedule],
                              placement_only: Tuple[str, ...] = (), *,
                              serve: bool = False,
-                             kv_paging: Optional[KVPagingPlan] = None) -> None:
+                             kv_paging: Optional[KVPagingPlan] = None,
+                             step_fn=None, step_args: Tuple = (),
+                             host_avals=(), expect_donation: bool = False,
+                             step_name: str = "step") -> None:
     """Planner invariant (DESIGN.md §6/§7): every residency class priced into
     `host_bytes` must either appear in `SwapSchedule.stream` (an executor
     stream exists and will run) or be declared placement-only by documented
@@ -254,7 +257,15 @@ def check_schedule_invariant(residency: Dict[str, str],
     stream — the slot-batched decode step needs every ACTIVE slot's pages in
     HBM, so the only thing that can deliver host residency is paging the
     backlog. Host kvcache residency in a serve plan therefore additionally
-    requires a declared `kv_paging` sizing."""
+    requires a declared `kv_paging` sizing.
+
+    step_fn (+ step_args, optionally host_avals / expect_donation): a
+    concrete jitted step built against this plan. When given, the jaxpr
+    auditor (repro.analysis) traces it abstractly and this check also
+    fails on any gating compile-time finding — dropped donation,
+    host-declared leaves re-materialized on device, un-streamed transfers
+    inside the layer scan — so plan self-consistency and plan↔artifact
+    conformance are one call."""
     streams = set(schedule.stream) if schedule is not None else set()
     missing = sorted(c for c, r in residency.items()
                      if r == "host" and c not in streams
@@ -272,6 +283,23 @@ def check_schedule_invariant(residency: Dict[str, str],
             "slot-batched decode step keeps active slots' pages in HBM, so "
             "only the paging pool (serve/kvpool.py) can execute the "
             "spill/return traffic this plan prices")
+    if step_fn is not None:
+        # plan-time AND compile-time conformance in one entry point: trace
+        # the concrete step abstractly and run the jaxpr audit against
+        # this very plan (DESIGN.md §11). Per-layer transfers inside the
+        # layer scan are legitimate exactly when this schedule streams.
+        from repro.analysis.jaxpr_audit import audit_step
+        audit = audit_step(
+            step_name, step_fn, step_args,
+            expect_donation=expect_donation, host_avals=host_avals,
+            allow_scan_transfers=bool(schedule is not None
+                                      and schedule.stream))
+        gating = [f for f in audit.findings if f.gating]
+        if gating:
+            msgs = "; ".join(f"{f.code}: {f.message}" for f in gating)
+            raise AssertionError(
+                f"step '{step_name}' does not conform to the plan it was "
+                f"built against — {msgs}")
 
 
 def _logical_factor(mesh: MeshSpec, logical: str, rules=None) -> int:
@@ -425,6 +453,7 @@ def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None,
     kv_dtype="int8": pages hold int8 codes plus one f32 scale per
     token-position per kv head (k and v each), the serve pool's compact
     page format."""
+    from repro.models import kvquant
     tp = _axis_size(mesh, "model")
     kvh_f = tp if cfg.num_kv_heads % max(tp, 1) == 0 else 1
     seq_f = _logical_factor(mesh, "kv_seq", rules)
@@ -432,7 +461,7 @@ def kv_token_bytes_dev(cfg: ModelConfig, mesh: MeshSpec, rules=None,
     per = 0
     for kind in cfg.layer_kinds():
         if kind == "attn":
-            if kv_dtype == "int8":
+            if kvquant.is_int8(kv_dtype):
                 per += 2 * cfg.num_kv_heads * (cfg.head_dim * 1 + 4) // f
             else:
                 per += 2 * cfg.num_kv_heads * cfg.head_dim * 2 // f

@@ -60,7 +60,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     plan = plan_memory(cfg, shape, mesh_spec,
                        LMSConfig(enabled=lms),
                        zero1=(ddl_mode == "zero1"), rules=_rules)
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         if shape.kind == "train":
             tcfg = TrainConfig(model=cfg, shape=shape, mesh=mesh_spec,
@@ -106,10 +106,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             bspecs, _ = model.input_specs(shape, mesh)
             pos = bspecs.pop("pos")
             lowered = fn.lower(pshapes, cshapes, bspecs, pos)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.monotonic() - t0
     except Exception as e:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -20,6 +20,7 @@ import numpy as np
 from repro.config.base import MeshSpec, ShapeConfig
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_mesh
+from repro.models import kvquant
 from repro.models.model import Model
 from repro.serve import (ServeEngine, decode_step_batch,
                          static_batch_from_requests, synth_requests)
@@ -95,7 +96,7 @@ def main(argv=None):
     if args.static and (args.temperature > 0 or args.top_k):
         p.error("--temperature/--top-k sample in the engine only; the "
                 "--static baseline loop is greedy by construction")
-    if args.static and args.kv_dtype != "model":
+    if args.static and kvquant.validate_kv_dtype(args.kv_dtype) != "model":
         p.error("--kv-dtype applies to the engine's paged pool; the "
                 "--static baseline decodes a model-width cache")
 

@@ -43,6 +43,13 @@ def validate_kv_dtype(kv_dtype: str) -> str:
     return kv_dtype
 
 
+def is_int8(kv_dtype: str) -> bool:
+    """The one sanctioned way to branch on the knob (lint rule RL003):
+    validates first, so a typo'd kv_dtype fails loudly instead of silently
+    selecting the model-width path."""
+    return validate_kv_dtype(kv_dtype) == "int8"
+
+
 def is_quantized_cache(layer_cache) -> bool:
     return isinstance(layer_cache, dict) and "k_scale" in layer_cache
 

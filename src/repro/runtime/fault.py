@@ -17,6 +17,10 @@ from typing import Dict, List, Optional
 class Heartbeat:
     process: int
     step: int
+    # monotonic stamp (lint RL001): staleness is `now - t` and an NTP step
+    # of the wall clock must not fake a dead (or resurrect a dead) process.
+    # Monotonic clocks are host-local; this store is host-local too (the
+    # detector and the beating processes share a machine / namespace).
     t: float
     step_time: float
 
@@ -29,7 +33,7 @@ class HeartbeatStore:
         os.makedirs(directory, exist_ok=True)
 
     def beat(self, process: int, step: int, step_time: float):
-        hb = Heartbeat(process, step, time.time(), step_time)
+        hb = Heartbeat(process, step, time.monotonic(), step_time)
         tmp = os.path.join(self.dir, f".hb_{process}.tmp")
         with open(tmp, "w") as f:
             json.dump(dataclasses.asdict(hb), f)
@@ -57,7 +61,7 @@ class FailureDetector:
 
     def check(self, beats: Dict[int, Heartbeat], expected: List[int],
               now: Optional[float] = None):
-        now = now if now is not None else time.time()
+        now = now if now is not None else time.monotonic()
         dead = [p for p in expected
                 if p not in beats or now - beats[p].t > self.timeout]
         alive = [p for p in expected if p not in dead]

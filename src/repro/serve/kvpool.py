@@ -130,7 +130,7 @@ class PagedKVPool:
         self.null_page = device_pages
         self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
         base = model.init_cache(slots, max_len)
-        if self.kv_dtype == "int8":
+        if kvquant.is_int8(self.kv_dtype):
             # int8 KV pages: attn k/v leaves become codes + per-row scale
             # leaves — both arenas (device AND pinned host) store the
             # compact format, halving the page budget bytes at fixed
@@ -302,7 +302,7 @@ class PagedKVPool:
         """Prefill output enters the pool at model width; int8 pools
         quantize the pageable k/v leaves here (the pool boundary), so
         prefill math itself stays untouched."""
-        if self.kv_dtype == "int8":
+        if kvquant.is_int8(self.kv_dtype):
             return kvquant.quantize_cache_tree(req_cache, self.max_len)
         return req_cache
 

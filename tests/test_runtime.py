@@ -23,7 +23,7 @@ def test_heartbeat_roundtrip(tmp_path):
 
 def test_failure_detection(tmp_path):
     det = FailureDetector(timeout=60.0)
-    now = time.time()
+    now = time.monotonic()  # Heartbeat.t is a monotonic stamp
     beats = {0: Heartbeat(0, 5, now, 0.5), 1: Heartbeat(1, 5, now - 120, 0.5)}
     dead, _ = det.check(beats, expected=[0, 1, 2], now=now)
     assert set(dead) == {1, 2}  # 1 stale, 2 never beat
@@ -31,7 +31,7 @@ def test_failure_detection(tmp_path):
 
 def test_straggler_detection():
     det = FailureDetector(timeout=60.0, straggler_factor=2.0)
-    now = time.time()
+    now = time.monotonic()  # Heartbeat.t is a monotonic stamp
     beats = {i: Heartbeat(i, 5, now, 0.5) for i in range(4)}
     beats[3] = Heartbeat(3, 5, now, 2.0)  # 4x median
     dead, strag = det.check(beats, expected=list(range(4)), now=now)

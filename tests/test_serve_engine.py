@@ -520,3 +520,31 @@ def test_quantize_cache_tree_roundtrip(setup):
     for (keys, leaf), (_, orig) in zip(_flat(dq), _flat(cache)):
         np.testing.assert_allclose(np.asarray(leaf), np.asarray(orig),
                                    atol=0.02, rtol=0.02, err_msg=str(keys))
+
+
+def test_deadline_zero_is_already_expired(setup):
+    """Regression pin for the Optional-float truthiness bug class (lint
+    RL002, DESIGN.md §11): deadline_s=0.0 is a REAL, already-blown latency
+    budget — NOT "no deadline" — and arrival=0.0 is a REAL arrival stamp
+    (a trace timed from zero), not "unstamped"."""
+    from repro.serve.scheduler import Request
+    cfg, mesh, model, _, params, _ = setup
+    eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
+                      page_size=PAGE, prefill_chunk=CHUNK, params=params)
+    prompt = np.arange(4, dtype=np.int32)
+    r0 = Request(rid=9901, prompt=prompt, max_new=2,
+                 arrival=0.0, deadline_s=0.0)
+    assert eng._deadline(r0) == 0.0, \
+        "deadline_s=0.0 must resolve to an (expired) deadline, not None"
+    r1 = Request(rid=9902, prompt=prompt, max_new=2,
+                 arrival=0.0, deadline_s=5.0)
+    assert eng._deadline(r1) == 5.0, "arrival=0.0 is a real arrival stamp"
+    assert eng._deadline(Request(rid=9903, prompt=prompt, max_new=2,
+                                 arrival=0.0, deadline_s=None)) is None
+    # and through the lifecycle sweep: the zero-budget request retires as
+    # "timeout" at the first scheduling boundary, the 5s one survives
+    eng.scheduler.submit(r0)
+    eng.scheduler.submit(r1)
+    eng._sweep(now=1.0)
+    assert r0.status == "timeout"
+    assert r1.status == "queued"
