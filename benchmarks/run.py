@@ -110,6 +110,12 @@ def main() -> None:
                     help="warn: report regressions without failing — for a "
                          "new machine class whose baseline has not been "
                          "re-recorded yet")
+    ap.add_argument("--obs-report", default=None,
+                    help="override the obs_report.json path (written next "
+                         "to the BENCH json by default)")
+    ap.add_argument("--trace", default=None,
+                    help="also write a Chrome trace_event JSON of the "
+                         "run's span timeline")
     args = ap.parse_args()
 
     b = _import_modules()
@@ -155,6 +161,19 @@ def main() -> None:
                    "failures": failures,
                    "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)", file=sys.stderr)
+    # observability sidecar (DESIGN.md §12): the swap/compute/collective
+    # span timeline every bench module recorded into the global ring,
+    # reduced to per-step overlap_frac + per-residency-class swap bytes —
+    # the report Planner v2 consumes alongside analysis_report.json
+    from repro.obs import export_chrome_trace, get_obs, write_obs_report
+    obs_path = args.obs_report or os.path.join(
+        os.path.dirname(out) or ".", "obs_report.json")
+    write_obs_report(obs_path, obs=get_obs(),
+                     meta={"mode": "smoke" if args.smoke else "full"})
+    print(f"wrote {obs_path}", file=sys.stderr)
+    if args.trace:
+        export_chrome_trace(get_obs().ring.events(), args.trace)
+        print(f"wrote {args.trace}", file=sys.stderr)
     if failures:
         sys.exit(1)
     if args.compare:

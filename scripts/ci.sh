@@ -63,6 +63,33 @@ assert any(r["table"] == "serve" and r["name"].startswith("serve_engine_faults")
            for r in rows), "bench_serve faulted row missing from BENCH_smoke"
 EOF
 
+echo "== observability smoke (DESIGN.md §12) =="
+# drive the instrumented train + serve paths with the JSONL sink on, then
+# assert the obs report carries the fields Planner v2 consumes: nonzero
+# swap spans, overlap_frac, per-residency-class swap bytes
+python -m repro.launch.train --arch olmo-1b --smoke --steps 2 --batch 2 \
+    --seq 32 --ckpt-dir /tmp/ci_obs_ckpt --log-every 2 \
+    --obs-jsonl /tmp/ci_obs_train.jsonl > /dev/null
+python -m repro.launch.serve --arch olmo-1b --smoke --requests 5 --slots 2 \
+    --prompt-len 8 --gen 8 --page-size 4 --prefill-chunk 4 \
+    --obs-jsonl /tmp/ci_obs_serve.jsonl --trace trace_smoke.json \
+    --obs-report obs_report.json > /dev/null
+test -s /tmp/ci_obs_train.jsonl
+test -s /tmp/ci_obs_serve.jsonl
+test -s trace_smoke.json
+python - <<'EOF'
+import json
+r = json.load(open("obs_report.json"))
+assert "overlap_frac" in r, "obs_report missing overlap_frac"
+assert r["swap_spans"] > 0, "obs_report has no swap spans"
+assert r["classes"].get("kvcache", {}).get("bytes", 0) > 0, \
+    "obs_report has no per-class swap bytes"
+assert r["per_step"] and all("overlap_frac" in row for row in r["per_step"])
+t = json.load(open("trace_smoke.json"))
+phs = {e["ph"] for e in t["traceEvents"]}
+assert {"M", "X"} <= phs, f"chrome trace missing span/meta events: {phs}"
+EOF
+
 echo "== kernel tests, forced Pallas interpret =="
 # every _use_pallas() gate honors REPRO_PALLAS_INTERPRET=1: the kernel test
 # files execute the real Pallas bodies under the interpreter on CPU instead

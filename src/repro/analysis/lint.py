@@ -28,6 +28,12 @@ Rules (all severity "error"; unwaived findings gate CI):
                               without clamping (jnp.minimum/clip) — an
                               out-of-range block index faults or reads
                               garbage on real hardware.
+  RL007 obs-site-name         a string-literal site/metric name passed to
+                              an obs call (span/instant/trace_event/
+                              counter/gauge/histogram/series) that is not
+                              a lowercase dotted identifier under a
+                              registered prefix (repro.obs.sites) — a
+                              typo'd site silently forks the timeline.
 
 Waiver syntax — same line or the line above the finding:
 
@@ -46,6 +52,7 @@ import sys
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.analysis.report import Finding
+from repro.obs.sites import SITE_PREFIXES, SITE_RE
 
 WAIVER_RE = re.compile(r"#\s*lint:\s*waive\s+([A-Z]{2}\d{3})\b\s*(.*)")
 
@@ -58,6 +65,10 @@ KV_VALIDATORS = {"validate_kv_dtype", "is_int8"}
 HOT_FUNCS = {"engine.py": {"_tick"}, "trainer.py": {"train"}}
 TIMER_ATTRS = {"perf_counter", "monotonic"}
 CLAMP_NAMES = {"minimum", "clip"}
+# obs recording entry points for RL007: any string-literal first arg is a
+# site/metric name and must validate against repro.obs.sites
+OBS_CALLS = {"span", "instant", "trace_event", "counter", "gauge",
+             "histogram", "series"}
 
 
 def _func_name(call: ast.Call) -> Optional[str]:
@@ -320,6 +331,33 @@ def rule_unclamped_index_map(tree: ast.AST) -> List[RuleHit]:
     return hits
 
 
+def rule_obs_site_names(tree: ast.AST) -> List[RuleHit]:
+    """RL007: string-literal site names at obs call sites must be lowercase
+    dotted identifiers under a registered prefix. Dynamic names (f-strings,
+    variables) are runtime-checked by check_site instead."""
+    hits = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _func_name(node) in OBS_CALLS and node.args):
+            continue
+        a = node.args[0]
+        if not (isinstance(a, ast.Constant) and isinstance(a.value, str)):
+            continue
+        site = a.value
+        if not SITE_RE.match(site):
+            hits.append((
+                "RL007", node.lineno,
+                f"obs site {site!r} is not a lowercase dotted identifier "
+                "(expected e.g. 'lms.swap_in')"))
+        elif site.split(".", 1)[0] not in SITE_PREFIXES:
+            hits.append((
+                "RL007", node.lineno,
+                f"obs site {site!r} uses unregistered prefix "
+                f"{site.split('.', 1)[0]!r}; registered: "
+                f"{', '.join(sorted(SITE_PREFIXES))} (repro.obs.sites)"))
+    return hits
+
+
 # ---------------------------------------------------------------------------
 # file / tree drivers
 
@@ -335,6 +373,7 @@ def lint_source(src: str, path: str, repo_root: str = "") -> List[Finding]:
     hits += rule_optional_truthiness(tree)
     hits += rule_kv_dtype_compare(tree)
     hits += rule_tracer_host_pull(tree, basename)
+    hits += rule_obs_site_names(tree)
     if f"{os.sep}benchmarks{os.sep}" in path or \
             os.path.basename(os.path.dirname(path)) == "benchmarks":
         hits += rule_bench_no_block(tree)

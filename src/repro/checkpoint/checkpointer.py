@@ -36,6 +36,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.obs import get_obs
 from repro.runtime import inject
 
 
@@ -109,38 +110,51 @@ class Checkpointer:
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
 
         def _write():
-            step_dir = os.path.join(self.dir, f"step_{step:08d}")
-            tmp = step_dir + f".tmp{process}"
-            os.makedirs(tmp, exist_ok=True)
-            flat = _flatten(host_state)
-            # npz can't hold ml_dtypes bfloat16: store a uint16 view + marker
-            enc = {}
-            for k, v in flat.items():
-                arr = np.asarray(v)
-                if arr.dtype.name == "bfloat16":
-                    enc["BF16::" + k] = arr.view(np.uint16)
-                else:
-                    enc[k] = arr
-            np.savez(os.path.join(tmp, f"shard_{process}.npz"), **enc)
-            if os.path.isdir(step_dir):
-                shutil.rmtree(step_dir)
-            os.rename(tmp, step_dir)
-            # the torn-checkpoint window: shards are on disk but the
-            # manifest — the commit point — is not. An injected crash here
-            # leaves exactly the state a machine death mid-save would.
-            inject.maybe(self._inj, "ckpt.commit")
-            # manifest time is REPORTING (when was this checkpoint taken,
-            # comparable across hosts/restarts) — wall-clock is the point
-            manifest = {"step": step,
-                        "time": time.time(),  # lint: waive RL001 manifest timestamp is wall-clock by design
+            # obs: the save span runs on the writer thread when async — the
+            # global ring is lock-protected, so off-thread recording is safe
+            obs = get_obs()
+            nbytes = sum(int(a.nbytes) for a in
+                         jax.tree.leaves(host_state))
+            with obs.span("ckpt.save", step=step, bytes=nbytes,
+                          async_save=self.async_save):
+                step_dir = os.path.join(self.dir, f"step_{step:08d}")
+                tmp = step_dir + f".tmp{process}"
+                os.makedirs(tmp, exist_ok=True)
+                flat = _flatten(host_state)
+                # npz can't hold ml_dtypes bfloat16: store a uint16 view +
+                # marker
+                enc = {}
+                for k, v in flat.items():
+                    arr = np.asarray(v)
+                    if arr.dtype.name == "bfloat16":
+                        enc["BF16::" + k] = arr.view(np.uint16)
+                    else:
+                        enc[k] = arr
+                np.savez(os.path.join(tmp, f"shard_{process}.npz"), **enc)
+                if os.path.isdir(step_dir):
+                    shutil.rmtree(step_dir)
+                os.rename(tmp, step_dir)
+                # the torn-checkpoint window: shards are on disk but the
+                # manifest — the commit point — is not. An injected crash
+                # here leaves exactly the state a machine death mid-save
+                # would.
+                inject.maybe(self._inj, "ckpt.commit")
+                # manifest time is REPORTING (when was this checkpoint
+                # taken, comparable across hosts/restarts) — wall-clock is
+                # the point
+                manifest = {"step": step,
+                            "time": time.time(),  # lint: waive RL001 manifest timestamp is wall-clock by design
 
-                        "num_processes": num_processes,
-                        "keys": sorted(flat.keys()), "extra": extra or {}}
-            mtmp = os.path.join(self.dir, f".manifest_{step}.tmp")
-            with open(mtmp, "w") as f:
-                json.dump(manifest, f)
-            os.rename(mtmp, os.path.join(step_dir, "manifest.json"))  # commit
-            self._gc()
+                            "num_processes": num_processes,
+                            "keys": sorted(flat.keys()),
+                            "extra": extra or {}}
+                mtmp = os.path.join(self.dir, f".manifest_{step}.tmp")
+                with open(mtmp, "w") as f:
+                    json.dump(manifest, f)
+                os.rename(mtmp,
+                          os.path.join(step_dir, "manifest.json"))  # commit
+                obs.instant("ckpt.commit", step=step)
+                self._gc()
 
         if self.async_save:
             def _guarded():

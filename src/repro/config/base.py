@@ -270,6 +270,9 @@ class TrainConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     checkpoint_every: int = 100
     async_checkpoint: bool = True
+    # observability: metrics flush cadence — device metrics cross to host
+    # (the per-step float() sync) only every log_every steps
+    log_every: int = 1
 
 
 def smoke_shape(kind: str = "train") -> ShapeConfig:

@@ -67,6 +67,7 @@ from repro.core.ddl.allreduce import (_leaf_is_replicated, ddl_reduce_leaf,
                                       flat_allreduce,
                                       hierarchical_reduce_scatter_flat,
                                       make_buckets)
+from repro.obs import get_obs
 
 
 def _bucket_elems(cfg: DDLConfig) -> int:
@@ -183,7 +184,17 @@ def reduce_tree_bucketed(ct, cfg: DDLConfig, *, data_axis: str,
         else:
             bucketable.append(i)
     sizes = [max(leaves[i].size, 1) for i in bucketable]
-    for bucket in make_buckets(sizes, _bucket_elems(cfg)):
+    buckets = make_buckets(sizes, _bucket_elems(cfg))
+    if buckets:
+        # trace-time accounting (fires once per layer-group trace, not per
+        # execution): bucket count + f32 reduction bytes for this layer's
+        # cotangent — the overlap report's collective track
+        _obs = get_obs()
+        _obs.trace_event("ddl.bucket", buckets=len(buckets),
+                         bytes=4 * sum(sizes), keep=keep)
+        _obs.registry.counter("ddl.buckets").inc(len(buckets))
+        _obs.registry.counter("ddl.bucket_bytes").inc(4 * sum(sizes))
+    for bucket in buckets:
         idxs = [bucketable[j] for j in bucket]
         parts = [leaves[i] for i in idxs]
         if keep == "full":

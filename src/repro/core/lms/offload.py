@@ -9,13 +9,37 @@ lowers it to async copy-start/copy-done on TPU, overlappable with compute.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro import compat
+from repro.obs import get_obs
 
 HOST = "pinned_host"
 DEVICE = "device"
+
+
+def _tree_bytes(tree) -> int:
+    """Logical byte size of a tensor tree — works on tracers (aval shape/
+    dtype), so the swap helpers can account bytes at JIT trace time."""
+    total = 0
+    for leaf in compat.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _record_swap(site: str, tree, cls: str) -> None:
+    """Trace-time swap accounting (DESIGN.md §12): the stream helpers run
+    inside jitted scan bodies, so this fires once per TRACE (one layer's
+    tensors = the plan's swap unit), not once per execution — recorded as
+    kind="trace" events plus per-residency-class byte counters, and kept
+    out of the wall-clock overlap math by the report."""
+    obs = get_obs()
+    nbytes = _tree_bytes(tree)
+    obs.trace_event(site, bytes=nbytes, cls=cls)
+    obs.registry.counter(f"{site}_bytes.{cls}").inc(nbytes)
+    obs.registry.counter(f"{site}_events.{cls}").inc()
 
 
 def effective_kind(kind):
@@ -49,17 +73,23 @@ def residency_shardings(spec_tree, mesh: Mesh, residency: dict, *,
         is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
-def stream_layer_to_device(layer_params):
+def stream_layer_to_device(layer_params, *, cls: str = "params"):
     """Swap-in one layer's tensor tree inside a scan body, preserving each
     leaf's sharding (TransferToMemoryKind: host -> HBM, async on TPU).
     Identity where the platform has one memory space, so the streamed graph
-    stays numerically byte-identical to the resident graph."""
+    stays numerically byte-identical to the resident graph.
+
+    `cls`: the plan residency class being streamed ("params", "optimizer",
+    "grads", "kvcache") — labels the trace-time swap accounting so the
+    overlap report can break bytes down per class."""
+    _record_swap("lms.swap_in", layer_params, cls)
     return compat.to_memory_kind(layer_params, effective_kind(DEVICE))
 
 
-def stream_layer_to_host(layer_tree):
+def stream_layer_to_host(layer_tree, *, cls: str = "params"):
     """Swap-OUT counterpart of `stream_layer_to_device`: place one layer's
     tensor tree back in pinned host memory inside a scan body (the streamed
     optimizer sweep's write-back, the backward hooks' gradient sink).
     Identity on single-memory-space platforms, like the swap-in."""
+    _record_swap("lms.swap_out", layer_tree, cls)
     return compat.to_memory_kind(layer_tree, effective_kind(HOST))

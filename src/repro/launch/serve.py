@@ -22,6 +22,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_mesh
 from repro.models import kvquant
 from repro.models.model import Model
+from repro.obs import (configure, export_chrome_trace, get_obs,
+                       write_obs_report)
 from repro.serve import (ServeEngine, decode_step_batch,
                          static_batch_from_requests, synth_requests)
 from repro.train.steps import build_decode_step, build_prefill_step
@@ -92,6 +94,15 @@ def main(argv=None):
                         "scales (~half the page bytes, DESIGN.md §8)")
     p.add_argument("--static", action="store_true",
                    help="run the whole-batch baseline loop instead")
+    # observability (DESIGN.md §12)
+    p.add_argument("--obs-jsonl", default="",
+                   help="stream span events to this JSONL file as they "
+                        "are recorded")
+    p.add_argument("--trace", default="",
+                   help="write a Chrome trace_event JSON (chrome://tracing "
+                        "/ Perfetto) at exit")
+    p.add_argument("--obs-report", default="",
+                   help="write the overlap/swap obs report JSON at exit")
     args = p.parse_args(argv)
     if args.static and (args.temperature > 0 or args.top_k):
         p.error("--temperature/--top-k sample in the engine only; the "
@@ -117,12 +128,14 @@ def main(argv=None):
         print("generated token ids (first row):", gen_toks[0][:16])
         return 0
 
+    configure(jsonl_path=args.obs_jsonl or None)
+    obs = get_obs()
     total = args.prompt_len + args.gen
     eng = ServeEngine(model, mesh, slots=min(args.slots, args.requests),
                       max_len=total, page_size=args.page_size,
                       prefill_chunk=args.prefill_chunk,
                       temperature=args.temperature, top_k=args.top_k,
-                      kv_dtype=args.kv_dtype)
+                      kv_dtype=args.kv_dtype, obs=obs)
     results = eng.run(reqs)
     m = eng.metrics()
     returned = int(m["pool_fetched_pages"] + m["pool_prefetched_pages"])
@@ -135,6 +148,15 @@ def main(argv=None):
           f"({int(m['pool_prefetched_pages'])} staged ahead)")
     print("generated token ids (first request):",
           np.asarray(results[reqs[0].rid])[:16])
+    if args.trace:
+        export_chrome_trace(obs.ring.events(), args.trace)
+        print(f"chrome trace: {args.trace}")
+    if args.obs_report:
+        write_obs_report(args.obs_report, obs=eng.obs)
+        print(f"obs report: {args.obs_report}")
+    print("-- metrics --")
+    for line in eng.obs.registry.summary_lines():
+        print(line)
     return 0
 
 

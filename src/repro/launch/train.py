@@ -15,6 +15,8 @@ import sys
 from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, ShapeConfig,
                                TrainConfig)
 from repro.configs import get_config, get_smoke_config
+from repro.obs import (TelemetryLoop, configure, export_chrome_trace,
+                       get_obs, write_obs_report)
 from repro.runtime import (FaultEvent, FaultInjector, FaultPlan,
                            RestartPolicy, Supervisor)
 from repro.train.trainer import Trainer
@@ -48,6 +50,22 @@ def main(argv=None):
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--log", default="")
+    # observability (DESIGN.md §12)
+    p.add_argument("--log-every", type=int, default=1,
+                   help="flush device metrics to host every N steps (the "
+                        "per-step float() sync becomes every-N)")
+    p.add_argument("--obs-jsonl", default="",
+                   help="stream span events to this JSONL file as they "
+                        "are recorded")
+    p.add_argument("--trace", default="",
+                   help="write a Chrome trace_event JSON (chrome://tracing "
+                        "/ Perfetto) at exit")
+    p.add_argument("--obs-report", default="",
+                   help="write the overlap/swap obs report JSON at exit")
+    p.add_argument("--spike-action", default="off",
+                   choices=["off", "record", "stop"],
+                   help="loss-spike telemetry: record alerts, or stop the "
+                        "run early on a spike")
     # supervised mode: crash-recovery loop (restore -> reshard -> resume)
     p.add_argument("--supervise", action="store_true",
                    help="run under the Supervisor: on failure, restore the "
@@ -77,7 +95,14 @@ def main(argv=None):
         ddl=DDLConfig(mode=args.ddl_mode, compress_dcn=args.compress_dcn),
         learning_rate=args.lr, warmup_steps=args.warmup,
         total_steps=args.steps, microbatches=args.microbatches,
-        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+        log_every=max(1, args.log_every))
+
+    configure(jsonl_path=args.obs_jsonl or None)
+    obs = get_obs()
+    telemetry = (TelemetryLoop(action=args.spike_action, obs=obs)
+                 if args.spike_action != "off" else None)
+
     def log(step, m):
         print(f"step {step:5d} | loss {m['loss']:.4f} | gnorm "
               f"{m['grad_norm']:.3f} | lr {m['lr']:.2e} | {m['time_s']*1e3:.0f} ms")
@@ -99,7 +124,7 @@ def main(argv=None):
                          policy=RestartPolicy(max_restarts=args.max_restarts,
                                               backoff_base=0.01,
                                               max_delay=1.0),
-                         injector=injector)
+                         injector=injector, obs=obs, telemetry=telemetry)
         res = sup.run(steps=args.steps, on_step=log)
         state, hist = res.state, res.hist
         for note in res.notes:
@@ -109,12 +134,24 @@ def main(argv=None):
                   f"in {res.attempts} attempts")
     else:
         trainer = Trainer(tcfg, heartbeat_dir=args.heartbeat_dir or None,
-                          injector=injector)
+                          injector=injector, obs=obs, telemetry=telemetry)
         state, hist = trainer.train(steps=args.steps, on_step=log)
     if args.log:
         with open(args.log, "w") as f:
             json.dump(hist, f, indent=1)
+    if telemetry is not None and telemetry.alerts:
+        for a in telemetry.alerts:
+            print(f"telemetry alert: {a}")
     print(f"final loss: {hist[-1]['loss']:.4f} (from {hist[0]['loss']:.4f})")
+    if args.trace:
+        export_chrome_trace(obs.ring.events(), args.trace)
+        print(f"chrome trace: {args.trace}")
+    if args.obs_report:
+        write_obs_report(args.obs_report, obs=obs)
+        print(f"obs report: {args.obs_report}")
+    print("-- metrics --")
+    for line in obs.registry.summary_lines():
+        print(line)
     return 0
 
 

@@ -800,7 +800,7 @@ def apply_decoder_decode(cfg, params, caches, x, pos, ctx,
                 if stream is not None and stream.streams_params:
                     lp = stream_layer_to_device(lp)
                 if stream is not None and stream.streams_kvcache:
-                    lc = stream_layer_to_device(lc)
+                    lc = stream_layer_to_device(lc, cls="kvcache")
                 ncs = {}
                 for i, k in enumerate(_pattern):
                     h, ncs[f"{k}_{i}"] = apply_layer_decode(

@@ -1,0 +1,27 @@
+"""Unified runtime observability (DESIGN.md §12): metrics registry,
+tracing spans over a bounded ring + JSONL sink, Chrome-trace / overlap
+report exporters, and the training telemetry loop.
+
+Dependency-free by design (stdlib only — no jax, no numpy): every layer of
+the system imports this package without ordering hazards, and the jaxpr
+auditor sees zero new primitives from instrumentation.
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                Series)
+from repro.obs.report import (build_obs_report, categorize,
+                              export_chrome_trace, overlap_report,
+                              write_obs_report)
+from repro.obs.sites import SITE_PREFIXES, SITE_RE, check_site
+from repro.obs.telemetry import SpikeDetector, TelemetryAlert, TelemetryLoop
+from repro.obs.trace import (Obs, SpanEvent, TraceRing, configure, get_obs,
+                             instant, reset, span, trace_event)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Series",
+    "build_obs_report", "categorize", "export_chrome_trace",
+    "overlap_report", "write_obs_report",
+    "SITE_PREFIXES", "SITE_RE", "check_site",
+    "SpikeDetector", "TelemetryAlert", "TelemetryLoop",
+    "Obs", "SpanEvent", "TraceRing", "configure", "get_obs", "instant",
+    "reset", "span", "trace_event",
+]

@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.config.base import TrainConfig
+from repro.obs import Obs, TelemetryLoop
 from repro.runtime.elastic import apply_decision, replan_mesh
 from repro.runtime.fault import FailureDetector, RestartPolicy
 from repro.runtime.inject import FaultInjector, InjectedFault
@@ -62,8 +63,14 @@ class Supervisor:
                  injector: Optional[FaultInjector] = None,
                  devices_available: Optional[int] = None,
                  catch: Tuple[type, ...] = (InjectedFault,),
-                 sleep_fn: Callable[[float], None] = time.sleep):
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 obs: Optional[Obs] = None,
+                 telemetry: Optional[TelemetryLoop] = None):
         self.tcfg = tcfg
+        # one Obs across every attempt: restart/reshard instants and all the
+        # per-attempt Trainer metrics land in a single registry + timeline
+        self.obs = obs if obs is not None else Obs()
+        self.telemetry = telemetry
         self.attn_impl = attn_impl
         self.process = process
         self.heartbeat_dir = heartbeat_dir
@@ -113,7 +120,9 @@ class Supervisor:
             self.trainer = Trainer(cfg, attn_impl=self.attn_impl,
                                    process=self.process,
                                    heartbeat_dir=self.heartbeat_dir,
-                                   injector=self.injector)
+                                   injector=self.injector,
+                                   obs=self.obs,
+                                   telemetry=self.telemetry)
             try:
                 state, _ = self.trainer.train(steps=steps, on_step=_on_step)
             except self._catch as e:
@@ -123,6 +132,9 @@ class Supervisor:
                         f"restart budget ({self.policy.max_restarts}) "
                         f"exhausted after {attempts} attempts") from e
                 restarts += 1
+                self.obs.instant("sup.restart", attempt=attempts,
+                                 error=str(e), delay_s=delay)
+                self.obs.registry.counter("sup.restarts").inc()
                 self._sleep(delay)
                 lost = 0
                 if isinstance(e, InjectedFault):
@@ -143,6 +155,9 @@ class Supervisor:
                             "or restore at the original scale") from e
                     cfg = new_cfg
                     notes.append(dec.note)
+                    self.obs.instant("sup.reshard", devices=devices,
+                                     note=dec.note)
+                    self.obs.registry.counter("sup.reshards").inc()
                 continue
             hist = [hist_by_step[k] for k in sorted(hist_by_step)]
             return SupervisedResult(state=state, hist=hist,

@@ -46,6 +46,7 @@ from repro.core.lms.planner import MemoryPlan
 from repro.models import kvquant
 from repro.models.model import Model
 from repro.models.paging import PageArena
+from repro.obs import Obs
 from repro.runtime.inject import FaultInjector, InjectedFault
 from repro.serve.batching import (decode_step_batch, request_prefill_batch,
                                   request_prompt_len)
@@ -64,12 +65,17 @@ class ServeEngine:
                  kv_dtype: Optional[str] = None, max_queue: int = 0,
                  stall_rounds: int = 64, watchdog_s: Optional[float] = None,
                  preemption: bool = True,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 obs: Optional[Obs] = None):
         cfg = model.cfg
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.slots, self.max_len = slots, max_len
         self.temperature, self.top_k = temperature, top_k
         self.seed, self.eos_id = seed, eos_id
+        # per-engine Obs: a PRIVATE metrics registry (two engines in one
+        # process — bench_serve — must not cross-contaminate counters) over
+        # the process-global span ring (one unified timeline for the trace)
+        self.obs = obs if obs is not None else Obs()
         # robustness knobs: stall_rounds bounds consecutive no-progress
         # scheduler rounds before queued work is failed (the watchdog's
         # round-count arm); watchdog_s is its wall-clock arm; preemption
@@ -125,7 +131,8 @@ class ServeEngine:
                                 host_slots=host_slots,
                                 cache_sharding=cache_sh,
                                 kv_dtype=kv_dtype,
-                                injector=injector)
+                                injector=injector,
+                                obs=self.obs)
         self.params = (jax.device_put(model.init(jax.random.key(seed)),
                                       params_sh)
                        if params is None else params)
@@ -143,12 +150,33 @@ class ServeEngine:
         self._prefill_fn = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=max_len))
 
-        self.scheduler = Scheduler(slots, max_queue=max_queue)
+        self.scheduler = Scheduler(slots, max_queue=max_queue,
+                                   registry=self.obs.registry)
         self._rngs: Dict[int, np.random.Generator] = {}
         self._last_run: List[Request] = []
-        self._ticks = 0
-        self._decode_tokens = 0
-        self._decode_s = 0.0
+        # throughput instruments; the legacy `_ticks` / `_decode_tokens` /
+        # `_decode_s` / `_wall_s` attributes survive as properties
+        reg = self.obs.registry
+        self._c_ticks = reg.counter("engine.ticks")
+        self._c_decode_tokens = reg.counter("engine.decode_tokens")
+        self._c_decode_s = reg.counter("engine.decode_s")
+        self._g_wall = reg.gauge("engine.wall_s")
+
+    @property
+    def _ticks(self) -> int:
+        return int(self._c_ticks.value)
+
+    @property
+    def _decode_tokens(self) -> int:
+        return int(self._c_decode_tokens.value)
+
+    @property
+    def _decode_s(self) -> float:
+        return self._c_decode_s.value
+
+    @property
+    def _wall_s(self) -> float:
+        return self._g_wall.value
 
     # ---- token selection --------------------------------------------------
     def _select(self, req: Request, row: np.ndarray) -> int:
@@ -172,21 +200,24 @@ class ServeEngine:
         logits row). Chunked on attention stacks (fixed chunk shape: one
         compile serves every prompt), whole-prompt otherwise."""
         plen = request_prompt_len(self.cfg, req)
-        if self._chunk:
-            c = self._chunk
-            row = None
-            for lo in range(0, plen, c):
-                hi = min(lo + c, plen)
-                batch = request_prefill_batch(self.cfg, req, lo, hi, pad_to=c)
-                logits, self._scratch = self._chunk_fn(
-                    self.params, self._scratch, batch, jnp.int32(lo),
-                    jnp.int32(hi))
-                if hi == plen:
-                    row = np.asarray(logits[0, plen - 1 - lo])
-            return self._scratch, row
-        batch = request_prefill_batch(self.cfg, req)
-        logits, cache = self._prefill_fn(self.params, batch)
-        return cache, np.asarray(logits[0])
+        with self.obs.span("engine.prefill", rid=req.rid, tokens=plen,
+                           chunked=bool(self._chunk)):
+            if self._chunk:
+                c = self._chunk
+                row = None
+                for lo in range(0, plen, c):
+                    hi = min(lo + c, plen)
+                    batch = request_prefill_batch(self.cfg, req, lo, hi,
+                                                  pad_to=c)
+                    logits, self._scratch = self._chunk_fn(
+                        self.params, self._scratch, batch, jnp.int32(lo),
+                        jnp.int32(hi))
+                    if hi == plen:
+                        row = np.asarray(logits[0, plen - 1 - lo])
+                return self._scratch, row
+            batch = request_prefill_batch(self.cfg, req)
+            logits, cache = self._prefill_fn(self.params, batch)
+            return cache, np.asarray(logits[0])
 
     def _first_token(self, req: Request, row: np.ndarray, t0: float) -> None:
         req.tokens.append(self._select(req, row))
@@ -338,6 +369,8 @@ class ServeEngine:
             return False               # host arena full: victim decodes on
         self.scheduler.evict(slot)
         self.scheduler.requeue(r, behind=1)
+        self.obs.instant("engine.preempt", rid=r.rid, slot=slot,
+                         tokens=len(r.tokens))
         return True
 
     def _maybe_preempt(self, now: float) -> None:
@@ -459,32 +492,36 @@ class ServeEngine:
             toks[s, 0] = r.tokens[-1]
             pos[s] = request_prompt_len(self.cfg, r) + len(r.tokens) - 1
             act[s] = True
-        posd = jnp.asarray(pos)
-        batch = decode_step_batch(self.cfg, jnp.asarray(toks), posd)
-        t0 = time.monotonic()
-        logits, self.pool.cache = self._decode_fn(
-            self.params, self.pool.cache, batch, posd, jnp.asarray(act))
-        # THE tick's one host sync: every slot's next-token row in one
-        # pull (all per-request bookkeeping below is host-side numpy)
-        rows = np.asarray(logits)  # lint: waive RL004 the single budgeted sync of the tick
-        self._decode_s += time.monotonic() - t0
-        released = False
-        for s, r in active.items():
-            tok = self._select(r, rows[s])
-            r.tokens.append(tok)
-            if self._done(r):
-                r.done_mono = time.monotonic()
-                self.scheduler.finish(s)
-                self.pool.release(r.rid)
-                released = True
-        if released:
-            # a release is the budget headroom the double buffer needs:
-            # stage the next waiting request NOW so its host->device copy
-            # runs during token selection / batch build and the coming
-            # _admit attaches from the staged block instead of the arena
-            self._prefetch_next()
-        self._ticks += 1
-        self._decode_tokens += len(active)
+        # the tick span is a COMPUTE interval for the overlap report: pool
+        # prefetch/release spans nesting inside it are swap work hidden
+        # under decode
+        with self.obs.span("engine.tick", batch=len(active)):
+            posd = jnp.asarray(pos)
+            batch = decode_step_batch(self.cfg, jnp.asarray(toks), posd)
+            t0 = time.monotonic()
+            logits, self.pool.cache = self._decode_fn(
+                self.params, self.pool.cache, batch, posd, jnp.asarray(act))
+            # THE tick's one host sync: every slot's next-token row in one
+            # pull (all per-request bookkeeping below is host-side numpy)
+            rows = np.asarray(logits)  # lint: waive RL004 the single budgeted sync of the tick
+            self._c_decode_s.inc(time.monotonic() - t0)
+            released = False
+            for s, r in active.items():
+                tok = self._select(r, rows[s])
+                r.tokens.append(tok)
+                if self._done(r):
+                    r.done_mono = time.monotonic()
+                    self.scheduler.finish(s)
+                    self.pool.release(r.rid)
+                    released = True
+            if released:
+                # a release is the budget headroom the double buffer needs:
+                # stage the next waiting request NOW so its host->device copy
+                # runs during token selection / batch build and the coming
+                # _admit attaches from the staged block instead of the arena
+                self._prefetch_next()
+        self._c_ticks.inc()
+        self._c_decode_tokens.inc(len(active))
 
     # ---- driver -----------------------------------------------------------
     def _fail_queued(self, reason: str) -> None:
@@ -532,7 +569,7 @@ class ServeEngine:
             self._prefetch_next()
             self._tick()
             last_progress = time.monotonic()
-        self._wall_s = time.monotonic() - t0
+        self._g_wall.set(time.monotonic() - t0)
         done = self.scheduler.drain()
         for r in done:
             self._rngs.pop(r.rid, None)
@@ -540,30 +577,32 @@ class ServeEngine:
         return {r.rid: np.asarray(r.tokens, np.int32) for r in done}
 
     def metrics(self) -> Dict[str, float]:
+        """Registry-backed metrics view. The KEY SET is a stable surface
+        (regression-tested): re-expressing it over the obs registry must not
+        rename or drop anything callers already consume."""
         sched = self.scheduler
+        ticks, dtok = self._ticks, self._decode_tokens
         out = {
             # all-time terminal requests; per-status counters alongside.
             # finished Requests themselves are DRAINED each run — only the
             # bounded latency windows and these counters persist, so a
             # long-lived engine's footprint stays flat
             "requests": float(sched.served_total),
-            "ticks": float(self._ticks),
-            "decode_tokens": float(self._decode_tokens),
-            "decode_tok_s": (self._decode_tokens / self._decode_s
+            "ticks": float(ticks),
+            "decode_tokens": float(dtok),
+            "decode_tok_s": (dtok / self._decode_s
                              if self._decode_s else 0.0),
-            "mean_concurrency": (self._decode_tokens / self._ticks
-                                 if self._ticks else 0.0),
-            "wall_s": getattr(self, "_wall_s", 0.0),
+            "mean_concurrency": dtok / ticks if ticks else 0.0,
+            "wall_s": self._g_wall.value,
         }
         for k, v in sched.counters.items():
             out[k] = float(v)
-        tt = list(sched.ttft_window)
-        if tt:
-            out["ttft_mean_s"] = float(np.mean(tt))
-            out["ttft_p95_s"] = float(np.percentile(tt, 95))
-        tp = list(sched.tpot_window)
-        if tp:
-            out["tpot_p50_s"] = float(np.percentile(tp, 50))
-            out["tpot_p95_s"] = float(np.percentile(tp, 95))
+        ttft, tpot = sched._ttft, sched._tpot
+        if ttft.window:
+            out["ttft_mean_s"] = float(ttft.mean())
+            out["ttft_p95_s"] = float(ttft.percentile(95))
+        if tpot.window:
+            out["tpot_p50_s"] = float(tpot.percentile(50))
+            out["tpot_p95_s"] = float(tpot.percentile(95))
         out.update({f"pool_{k}": float(v) for k, v in self.pool.stats.items()})
         return out

@@ -59,6 +59,7 @@ from repro import compat
 from repro.core.lms.offload import DEVICE, HOST, effective_kind
 from repro.models import kvquant
 from repro.models.paging import PAGED_LEAF_KEYS
+from repro.obs import Obs, get_obs
 
 __all__ = ["PagedKVPool", "PAGED_LEAF_KEYS"]
 
@@ -117,8 +118,13 @@ class PagedKVPool:
     def __init__(self, model, *, slots: int, max_len: int, page_size: int,
                  device_pages: int, host_pages: int,
                  host_slots: Optional[int] = None, cache_sharding=None,
-                 kv_dtype: str = "model", injector=None):
+                 kv_dtype: str = "model", injector=None,
+                 obs: Optional[Obs] = None):
         cfg = model.cfg
+        # observability (DESIGN.md §12): spill/prefetch/attach/preempt emit
+        # spans with per-page byte accounting (cls="kvcache"). Durations are
+        # dispatch-side (the copies themselves are async jax ops).
+        self._obs = obs if obs is not None else get_obs()
         if max_len % page_size:
             raise ValueError(
                 f"page_size={page_size} must divide max_len={max_len}: a "
@@ -141,6 +147,10 @@ class PagedKVPool:
 
         self._info: Dict[Tuple[str, ...], _LeafInfo] = {}
         self._host: Dict[Tuple[str, ...], jax.Array] = {}
+        # bytes moved per page / per slot-state block across ALL leaves —
+        # the span byte accounting's unit prices
+        self._page_bytes = 0
+        self._state_bytes = 0
         hk = effective_kind(HOST)
         flat, _ = jtu.tree_flatten_with_path(base)
         for path, leaf in flat:
@@ -152,10 +162,14 @@ class PagedKVPool:
             self._info[keys] = _LeafInfo(keys, stacked, ba, paged)
             rest = leaf.shape[ba + 1:]
             lead = leaf.shape[:ba]           # (L,) when stacked
+            item = np.dtype(leaf.dtype).itemsize
             if paged:
                 shape = (host_pages,) + lead + (page_size,) + rest[1:]
+                self._page_bytes += int(
+                    np.prod(lead + (page_size,) + rest[1:])) * item
             else:
                 shape = (host_slots,) + lead + rest
+                self._state_bytes += int(np.prod(lead + rest) or 1) * item
             self._host[keys] = compat.to_memory_kind(
                 jnp.zeros(shape, leaf.dtype), hk)
         self.has_paged = any(i.paged for i in self._info.values())
@@ -310,13 +324,24 @@ class PagedKVPool:
         assert n <= len(self._free_dev), "device arena page budget exceeded"
         return np.asarray([self._free_dev.pop() for _ in range(n)], np.int32)
 
+    def _swap_bytes(self, pages: int, state: bool = True) -> int:
+        """Bytes one lifecycle move touches: `pages` content pages across
+        every paged leaf (+ the wholesale per-slot state block)."""
+        return pages * self._page_bytes + (self._state_bytes if state else 0)
+
     # ---- lifecycle --------------------------------------------------------
     def spill(self, rid: int, req_cache, length: int,
               reserve_pages: int) -> None:
         """Write a prefilled request's content pages + state out to the host
         arena (the cold path a request takes when no slot admits it yet)."""
+        with self._obs.span("pool.spill", rid=rid, cls="kvcache") as ev:
+            self._spill(rid, req_cache, length, reserve_pages, ev)
+
+    def _spill(self, rid: int, req_cache, length: int, reserve_pages: int,
+               ev) -> None:
         req_cache = self._ingest(req_cache)
         n = self.pages_needed(length)
+        ev.attrs.update(pages=n, bytes=self._swap_bytes(n))
         assert self._has_host(n), f"host arena full (need {n} pages)"
         assert rid not in self._table, f"request {rid} already pooled"
         ids = np.asarray([self._free_host_pages.pop()
@@ -360,18 +385,22 @@ class PagedKVPool:
             return False
         if not self._has_dev(e.reserve_pages):
             return False
-        e.dev_ids = self._claim_dev(e.reserve_pages)
-        dk = effective_kind(DEVICE)
-        for keys, info in self._info.items():
-            if info.paged:
-                if e.content_pages == 0:
-                    continue
-                pages = compat.to_memory_kind(
-                    self._host[keys][jnp.asarray(e.host_ids)], dk)
-                self._write_arena(keys, e.dev_ids[:e.content_pages], pages)
-            else:
-                e.staged[keys] = compat.to_memory_kind(
-                    self._host[keys][e.host_state_id], dk)
+        with self._obs.span("pool.prefetch", rid=rid, cls="kvcache",
+                            pages=int(e.content_pages),
+                            bytes=self._swap_bytes(e.content_pages)):
+            e.dev_ids = self._claim_dev(e.reserve_pages)
+            dk = effective_kind(DEVICE)
+            for keys, info in self._info.items():
+                if info.paged:
+                    if e.content_pages == 0:
+                        continue
+                    pages = compat.to_memory_kind(
+                        self._host[keys][jnp.asarray(e.host_ids)], dk)
+                    self._write_arena(keys, e.dev_ids[:e.content_pages],
+                                      pages)
+                else:
+                    e.staged[keys] = compat.to_memory_kind(
+                        self._host[keys][e.host_state_id], dk)
         self._staged += e.reserve_pages
         e.where = "staged"
         self.stats["prefetched_pages"] += int(e.content_pages)
@@ -384,28 +413,32 @@ class PagedKVPool:
         host-resident requests pay the host->arena scatter here."""
         e = self._table[rid]
         assert e.where in ("host", "staged"), e.where
-        if e.where == "host":
-            # fetch on the spot (prefetch never ran): claim pages + scatter
-            e.dev_ids = self._claim_dev(e.reserve_pages)
-            dk = effective_kind(DEVICE)
-            for keys, info in self._info.items():
-                if info.paged:
-                    if e.content_pages == 0:
-                        continue
-                    pages = compat.to_memory_kind(
-                        self._host[keys][jnp.asarray(e.host_ids)], dk)
-                    self._write_arena(keys, e.dev_ids[:e.content_pages],
-                                      pages)
-                else:
-                    self._write_slot(
-                        keys, self._host[keys][e.host_state_id], slot)
-            self.stats["fetched_pages"] += int(e.content_pages)
-        else:
-            # staged: paged leaves need NOTHING — only the state block moves
-            for keys, info in self._info.items():
-                if not info.paged:
-                    self._write_slot(keys, e.staged[keys], slot)
-            self._staged -= e.reserve_pages
+        moved = (self._swap_bytes(e.content_pages) if e.where == "host"
+                 else self._swap_bytes(0))   # staged: state block only
+        with self._obs.span("pool.attach", rid=rid, slot=slot, cls="kvcache",
+                            staged=(e.where == "staged"), bytes=moved):
+            if e.where == "host":
+                # fetch on the spot (prefetch never ran): claim + scatter
+                e.dev_ids = self._claim_dev(e.reserve_pages)
+                dk = effective_kind(DEVICE)
+                for keys, info in self._info.items():
+                    if info.paged:
+                        if e.content_pages == 0:
+                            continue
+                        pages = compat.to_memory_kind(
+                            self._host[keys][jnp.asarray(e.host_ids)], dk)
+                        self._write_arena(keys, e.dev_ids[:e.content_pages],
+                                          pages)
+                    else:
+                        self._write_slot(
+                            keys, self._host[keys][e.host_state_id], slot)
+                self.stats["fetched_pages"] += int(e.content_pages)
+            else:
+                # staged: paged leaves need NOTHING — only the state moves
+                for keys, info in self._info.items():
+                    if not info.paged:
+                        self._write_slot(keys, e.staged[keys], slot)
+                self._staged -= e.reserve_pages
         self._map_slot(slot, e.dev_ids)
         self._free_host_pages.extend(int(i) for i in e.host_ids)
         self._free_host_slots.append(e.host_state_id)
@@ -425,19 +458,24 @@ class PagedKVPool:
         n = self.pages_needed(length)
         assert self._has_dev(reserve_pages), "admission check missing"
         dev_ids = self._claim_dev(reserve_pages)
-        flat, _ = jtu.tree_flatten_with_path(req_cache)
-        for path, leaf in flat:
-            keys = _path_keys(path)
-            info = self._info[keys]
-            if info.paged:
-                if n == 0:
-                    continue
-                block = self._content_block(leaf, info, n * self.page_size)
-                self._write_arena(keys, dev_ids[:n],
-                                  self._to_pages(block, info, n))
-            else:
-                self._write_slot(keys, self._content_block(leaf, info, 0),
-                                 slot)
+        with self._obs.span("pool.attach_fresh", rid=rid, slot=slot,
+                            cls="kvcache", pages=n,
+                            bytes=self._swap_bytes(n)):
+            flat, _ = jtu.tree_flatten_with_path(req_cache)
+            for path, leaf in flat:
+                keys = _path_keys(path)
+                info = self._info[keys]
+                if info.paged:
+                    if n == 0:
+                        continue
+                    block = self._content_block(leaf, info,
+                                                n * self.page_size)
+                    self._write_arena(keys, dev_ids[:n],
+                                      self._to_pages(block, info, n))
+                else:
+                    self._write_slot(keys,
+                                     self._content_block(leaf, info, 0),
+                                     slot)
         self._table[rid] = _Entry(reserve_pages, n, length, "dev", slot=slot,
                                   dev_ids=dev_ids)
         self._map_slot(slot, dev_ids)
@@ -451,6 +489,7 @@ class PagedKVPool:
         push its arena rows back on the free list — pointer writes only."""
         e = self._table.pop(rid)
         assert e.where == "dev", f"release of non-resident request: {e.where}"
+        self._obs.instant("pool.release", rid=rid, pages=int(e.reserve_pages))
         self._resident -= e.reserve_pages
         if e.dev_ids is not None and len(e.dev_ids):
             self._free_dev.extend(int(i) for i in e.dev_ids)
@@ -484,23 +523,25 @@ class PagedKVPool:
                           for _ in range(n)], np.int32)
         sid = self._free_host_slots.pop()
         hk = effective_kind(HOST)
-        for keys, info in self._info.items():
-            leaf = self._cache_leaf(keys)
-            if info.paged:
-                if n == 0:
-                    continue
-                rows = jnp.asarray(e.dev_ids[:n], jnp.int32)
-                pages = leaf[:, rows] if info.stacked else leaf[rows]
-                if info.stacked:
-                    pages = jnp.moveaxis(pages, 1, 0)   # -> page-major
-                self._host[keys] = _scatter(
-                    self._host[keys], jnp.asarray(ids),
-                    compat.to_memory_kind(pages, hk))
-            else:
-                state = leaf[:, slot] if info.stacked else leaf[slot]
-                self._host[keys] = _scatter(
-                    self._host[keys], jnp.asarray([sid], jnp.int32),
-                    compat.to_memory_kind(state[None], hk))
+        with self._obs.span("pool.preempt", rid=rid, cls="kvcache",
+                            pages=int(n), bytes=self._swap_bytes(n)):
+            for keys, info in self._info.items():
+                leaf = self._cache_leaf(keys)
+                if info.paged:
+                    if n == 0:
+                        continue
+                    rows = jnp.asarray(e.dev_ids[:n], jnp.int32)
+                    pages = leaf[:, rows] if info.stacked else leaf[rows]
+                    if info.stacked:
+                        pages = jnp.moveaxis(pages, 1, 0)   # -> page-major
+                    self._host[keys] = _scatter(
+                        self._host[keys], jnp.asarray(ids),
+                        compat.to_memory_kind(pages, hk))
+                else:
+                    state = leaf[:, slot] if info.stacked else leaf[slot]
+                    self._host[keys] = _scatter(
+                        self._host[keys], jnp.asarray([sid], jnp.int32),
+                        compat.to_memory_kind(state[None], hk))
         self._resident -= e.reserve_pages
         self._free_dev.extend(int(i) for i in e.dev_ids)
         if self.has_paged:

@@ -34,6 +34,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
 # terminal request statuses; "queued"/"active" are the live states
 TERMINAL = ("ok", "rejected", "timeout", "cancelled", "failed")
 
@@ -80,7 +82,8 @@ class Request:
 
 class Scheduler:
     def __init__(self, n_slots: int, *, max_queue: int = 0,
-                 stats_window: int = 512):
+                 stats_window: int = 512,
+                 registry: Optional[MetricsRegistry] = None):
         self.n_slots = n_slots
         # 0 = unbounded; >0 bounds the admission queue — submissions beyond
         # it are load-shed ("rejected") instead of growing latency unboundedly
@@ -89,14 +92,36 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.finished: List[Request] = []   # terminal, awaiting engine drain
         self._join_seq = 0
-        # bounded rolling windows + cumulative counters survive the drain:
-        # percentile stats stay available to a long-lived engine without
-        # retaining the Request objects themselves
-        self.ttft_window: Deque[float] = collections.deque(maxlen=stats_window)
-        self.tpot_window: Deque[float] = collections.deque(maxlen=stats_window)
-        self.counters: Dict[str, int] = {k: 0 for k in TERMINAL}
-        self.counters["preempted"] = 0
-        self.served_total = 0               # all-time terminal requests
+        # registry-backed stats survive the drain: bounded rolling histogram
+        # windows + cumulative counters keep percentile stats available to a
+        # long-lived engine without retaining the Request objects themselves.
+        # The legacy surface (`ttft_window`, `counters`, `served_total`) is
+        # preserved as properties over the instruments.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._ttft = self.registry.histogram("engine.ttft_s",
+                                             window=stats_window)
+        self._tpot = self.registry.histogram("engine.tpot_s",
+                                             window=stats_window)
+        self._req_total = self.registry.counter("engine.requests")
+        self._req = {k: self.registry.counter(f"engine.req.{k}")
+                     for k in TERMINAL}
+        self._req["preempted"] = self.registry.counter("engine.req.preempted")
+
+    @property
+    def ttft_window(self) -> Deque[float]:
+        return self._ttft.window
+
+    @property
+    def tpot_window(self) -> Deque[float]:
+        return self._tpot.window
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        return {k: int(c.value) for k, c in self._req.items()}
+
+    @property
+    def served_total(self) -> int:
+        return int(self._req_total.value)
 
     def submit(self, req: Request) -> bool:
         """Queue a request; False = load-shed (queue at max_queue), in which
@@ -140,7 +165,7 @@ class Scheduler:
         everyone else so its latency damage stays minimal."""
         req.status = "queued"
         req.preemptions += 1
-        self.counters["preempted"] += 1
+        self._req["preempted"].inc()
         self.queue.insert(min(behind, len(self.queue)), req)
 
     def retire(self, req: Request, status: str,
@@ -149,8 +174,8 @@ class Scheduler:
         assert status in TERMINAL, status
         req.status = status
         req.error = error
-        self.counters[status] += 1
-        self.served_total += 1
+        self._req[status].inc()
+        self._req_total.inc()
         self.finished.append(req)
 
     def finish(self, slot: int) -> Request:
@@ -166,10 +191,10 @@ class Scheduler:
         self.finished = []
         for r in done:
             if r.ttft_s is not None:
-                self.ttft_window.append(r.ttft_s)
+                self._ttft.observe(r.ttft_s)
             if (r.first_tok_mono is not None and r.done_mono is not None
                     and len(r.tokens) > 1):
-                self.tpot_window.append(
+                self._tpot.observe(
                     (r.done_mono - r.first_tok_mono) / (len(r.tokens) - 1))
         return done
 

@@ -234,11 +234,11 @@ def _streamed_opt_update(optimizer: str, grads, opt_state, params, *, cfg,
             g_l, s_l, p_l = xs
             # swap-ins first (state slice i+1's copy overlaps update i);
             # identity for classes already device-resident
-            s_l = stream_layer_to_device(s_l)
-            g_l = stream_layer_to_device(g_l)
+            s_l = stream_layer_to_device(s_l, cls="optimizer")
+            g_l = stream_layer_to_device(g_l, cls="grads")
             g_l = compat.tree.map(lambda g: clip_leaf(g, clip_scale), g_l)
             if needs_params:
-                p_l = stream_layer_to_device(p_l)
+                p_l = stream_layer_to_device(p_l, cls="params")
                 m2, p2 = _map_kernel(kernel, 2, g_l, s_l[0], p_l)
                 out_state = (m2,)
             else:
@@ -247,9 +247,9 @@ def _streamed_opt_update(optimizer: str, grads, opt_state, params, *, cfg,
                 p2 = compat.tree.map(lambda mp, dt: mp.astype(dt), mp2, _dts)
                 out_state = (m2, v2, mp2)
             # swap the updated slice straight back out
-            out_state = stream_layer_to_host(out_state)
+            out_state = stream_layer_to_host(out_state, cls="optimizer")
             if params_host:
-                p2 = stream_layer_to_host(p2)
+                p2 = stream_layer_to_host(p2, cls="params")
             return (), (out_state, p2)
 
         xs = (group(g_stacks[name]),
@@ -283,13 +283,16 @@ def _streamed_opt_update(optimizer: str, grads, opt_state, params, *, cfg,
         pdt = p_like.dtype                # static, no data dependency
 
         def one_shot(g1, ss1, p1):
-            ss1 = stream_layer_to_device(ss1)
-            g1 = clip_leaf(stream_layer_to_device(g1), clip_scale)
+            ss1 = stream_layer_to_device(ss1, cls="optimizer")
+            g1 = clip_leaf(stream_layer_to_device(g1, cls="grads"),
+                           clip_scale)
             if needs_params:
-                m2, p2 = kernel(g1, ss1[0], stream_layer_to_device(p1))
-                return stream_layer_to_host((m2,)) + (p2,)
+                m2, p2 = kernel(g1, ss1[0],
+                                stream_layer_to_device(p1, cls="params"))
+                return stream_layer_to_host((m2,), cls="optimizer") + (p2,)
             m2, v2, mp2 = kernel(g1, ss1[0], ss1[1], ss1[2])
-            return stream_layer_to_host((m2, v2, mp2)) + (mp2.astype(pdt),)
+            return (stream_layer_to_host((m2, v2, mp2), cls="optimizer")
+                    + (mp2.astype(pdt),))
 
         n = g.size
         c = _rest_chunks(n)
@@ -455,7 +458,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
                 # update would re-read the whole tree at once — a pure host
                 # round trip — so the placement is skipped then.
                 stacks, rest = _split_stack_grads(grads)
-                grads = _merge_stack_grads(rest, stream_layer_to_host(stacks))
+                grads = _merge_stack_grads(
+                    rest, stream_layer_to_host(stacks, cls="grads"))
         elif m == 1:
             # in-scan hooks reduced the decoder stacks during the backward
             # sweep; only the unscanned remainder goes through the tree pass

@@ -26,6 +26,7 @@ from repro.core.lms.planner import plan_memory
 from repro.data import DataLoader, SyntheticTokens, make_vlm_batch, make_audio_batch
 from repro.launch.mesh import make_mesh, mesh_axis_sizes
 from repro.models.model import Model
+from repro.obs import Obs, TelemetryLoop
 from repro.runtime import HeartbeatStore, StepTimer
 from repro.runtime import inject
 from repro.train.steps import (build_train_step, init_train_state,
@@ -36,8 +37,15 @@ from repro.train.steps import (build_train_step, init_train_state,
 class Trainer:
     def __init__(self, tcfg: TrainConfig, *, attn_impl: str = "blockwise",
                  process: int = 0, heartbeat_dir: Optional[str] = None,
-                 injector=None):
+                 injector=None, obs: Optional[Obs] = None,
+                 telemetry: Optional[TelemetryLoop] = None):
         self.tcfg = tcfg
+        # private registry over the shared span ring (same pattern as the
+        # serve engine); a supplied telemetry loop records its alerts here
+        self.obs = obs if obs is not None else Obs()
+        self.telemetry = telemetry
+        if telemetry is not None and telemetry.obs is None:
+            telemetry.obs = self.obs
         self.mesh = make_mesh(tcfg.mesh)
         self.model = Model(tcfg.model, attn_impl=attn_impl)
         self.plan = (plan_memory(tcfg.model, tcfg.shape, tcfg.mesh, tcfg.lms,
@@ -132,30 +140,65 @@ class Trainer:
               on_step: Optional[Callable] = None):
         state, start = self.resume_or_init()
         steps = steps or self.tcfg.total_steps
-        metrics_hist = []
+        log_every = max(1, self.tcfg.log_every)
+        series = self.obs.registry.series("train.history")
+        step_hist = self.obs.registry.histogram("train.step_s")
+        metrics_hist: list = []
+        pending: list = []
+        stop = False
+
+        def _flush():
+            # THE deferred host sync (DESIGN.md §12): metrics stay on device
+            # until here, so with log_every > 1 the float() pulls — and the
+            # dispatch stall they imply — amortize over log_every steps.
+            # on_step / telemetry fire at flush, in step order.
+            nonlocal stop
+            for step, metrics, dt in pending:
+                row = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]), "time_s": dt,
+                       # model aux metrics (real, not fabricated):
+                       # ce = cross-entropy, aux = MoE balance loss
+                       "ce": float(metrics["ce"]),
+                       "aux": float(metrics["aux"])}
+                metrics_hist.append(row)
+                series.append(row)
+                if on_step:
+                    on_step(step, row)
+                if self.telemetry is not None:
+                    self.telemetry.observe(step, row)
+                    stop = stop or self.telemetry.stop_requested
+            pending.clear()
+
         for i in range(start, steps):
             self.timer.start()
             # the crash drill's kill point: fires BEFORE the step dispatch,
             # so the step that dies was never applied — exactly the state a
             # lost peer leaves behind
             inject.maybe(self._inj, "trainer.step")
-            batch = self._make_batch()
-            state, metrics = self.step_fn(state, batch)
-            loss = float(metrics["loss"])   # sync point
+            flush_now = (i + 1) % log_every == 0 or i + 1 == steps
+            with self.obs.span("train.step", step=i + 1):
+                batch = self._make_batch()
+                state, metrics = self.step_fn(state, batch)
+                if flush_now:
+                    # sync inside the timed span so a flush step's dt (and
+                    # span) covers the compute it absorbs; non-flush steps
+                    # record dispatch-side timing only
+                    jax.block_until_ready(metrics)
             dt = self.timer.stop()
-            metrics_hist.append({"step": i + 1, "loss": loss,
-                                 "grad_norm": float(metrics["grad_norm"]),
-                                 "lr": float(metrics["lr"]), "time_s": dt,
-                                 # model aux metrics (real, not fabricated):
-                                 # ce = cross-entropy, aux = MoE balance loss
-                                 "ce": float(metrics["ce"]),
-                                 "aux": float(metrics["aux"])})
+            step_hist.observe(dt)
+            pending.append((i + 1, metrics, dt))
             if self.hb:
                 self._beat(i + 1, dt)
-            if on_step:
-                on_step(i + 1, metrics_hist[-1])
+            if flush_now:
+                _flush()
             if (i + 1) % self.tcfg.checkpoint_every == 0 or i + 1 == steps:
                 self.save(i + 1, state)
+            if stop:
+                # telemetry early-stop: checkpoint what we have, end cleanly
+                if (i + 1) % self.tcfg.checkpoint_every and i + 1 != steps:
+                    self.save(i + 1, state)
+                break
         self.ckpt.wait()
         return state, metrics_hist
 

@@ -126,6 +126,25 @@ def test_rl003_kv_dtype_compare():
     assert _codes("if kvquant.is_int8(kv_dtype):\n    pass\n") == []
 
 
+def test_rl007_obs_site_names():
+    # well-formed site under a registered prefix: clean
+    assert _codes('obs.span("lms.swap_in", bytes=4)\n') == []
+    assert _codes('reg.counter("engine.ticks").inc()\n') == []
+    # typo'd / unregistered prefix
+    assert _codes('obs.span("lmss.swap_in")\n') == ["RL007"]
+    assert _codes('obs.instant("engin.preempt")\n') == ["RL007"]
+    # not a lowercase dotted identifier
+    assert _codes('obs.span("swapin")\n') == ["RL007"]
+    assert _codes('obs.span("LMS.SwapIn")\n') == ["RL007"]
+    # dynamic names are runtime-checked, not lint territory
+    assert _codes('obs.span(f"{site}_bytes.{cls}")\n') == []
+    assert _codes("obs.span(name)\n") == []
+    # waiver works like every other rule
+    assert _codes('obs.span("weird.site")  '
+                  "# lint: waive RL007 external namespace\n",
+                  waived=False) == []
+
+
 def test_rl004_tracer_host_pull_scoped_to_hot_paths():
     src = "def _tick(self):\n    rows = np.asarray(logits)\n"
     assert _codes(src, path="serve/engine.py") == ["RL004"]

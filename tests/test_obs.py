@@ -1,0 +1,346 @@
+"""Observability layer (DESIGN.md §12): metrics registry semantics, span
+nesting + ring bounds, JSONL sink, Chrome-trace export, overlap report on
+synthetic spans, spike detection, and the trainer's log_every flush."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry, Obs,
+                       SpanEvent, SpikeDetector, TelemetryAlert,
+                       TelemetryLoop, TraceRing, build_obs_report,
+                       categorize, check_site, export_chrome_trace,
+                       overlap_report)
+
+
+def _iso_obs(maxlen=8192):
+    """Obs with a PRIVATE ring — tests must not touch the global timeline."""
+    return Obs(registry=MetricsRegistry(), ring=TraceRing(maxlen=maxlen))
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_counter_gauge_series_semantics():
+    reg = MetricsRegistry()
+    c = reg.counter("test.hits")
+    c.inc()
+    c.inc(2.5)
+    assert reg.counter("test.hits") is c          # created once
+    assert c.value == 3.5
+    g = reg.gauge("test.level")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+    s = reg.series("test.rows", maxlen=2)
+    s.append({"a": 1})
+    s.append({"a": 2})
+    s.append({"a": 3})                            # bounded: oldest dropped
+    assert [r["a"] for r in s] == [2, 3]
+    snap = reg.snapshot()
+    assert snap["counters"]["test.hits"] == 3.5
+    assert snap["gauges"]["test.level"] == 3.0
+    assert snap["series"]["test.rows"] == 2
+
+
+def test_histogram_window_and_percentiles_match_numpy():
+    reg = MetricsRegistry()
+    h = reg.histogram("test.lat_s", window=8)
+    vals = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0]
+    for v in vals:
+        h.observe(v)
+    # cumulative count/total see everything; the window keeps the last 8
+    assert h.count == 10 and h.total == sum(vals)
+    win = vals[-8:]
+    for p in (50, 95, 99):
+        assert h.percentile(p) == pytest.approx(np.percentile(win, p))
+    s = h.summary()
+    assert s["count"] == 10 and s["p50"] == pytest.approx(
+        np.percentile(win, 50))
+
+
+def test_registry_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("test.thing")
+    with pytest.raises(TypeError):
+        reg.histogram("test.thing")
+
+
+def test_invalid_site_rejected_everywhere():
+    assert check_site("lms.swap_in") == "lms.swap_in"
+    with pytest.raises(ValueError):
+        check_site("notdotted")
+    with pytest.raises(ValueError):
+        check_site("Upper.case")
+    with pytest.raises(ValueError):
+        check_site("unregistered_prefix.x")
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("bogus_prefix.count")
+    obs = _iso_obs()
+    with pytest.raises(ValueError):
+        with obs.span("nodots"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# spans, ring, sink
+
+
+def test_span_nesting_depth_and_exit_recording():
+    obs = _iso_obs()
+    with obs.span("test.outer", tag="o") as outer:
+        assert len(obs.ring) == 0              # spans record on EXIT
+        with obs.span("test.inner") as inner:
+            inner.attrs.update(extra=1)        # attrs mutable inside
+        obs.instant("test.mark")
+    evs = obs.ring.events()
+    assert [e.site for e in evs] == ["test.inner", "test.mark", "test.outer"]
+    assert outer.depth == 0 and inner.depth == 1
+    assert evs[1].depth == 1                   # instant inherits live depth
+    assert inner.attrs == {"extra": 1}
+    assert outer.attrs == {"tag": "o"}
+    assert outer.dur >= inner.dur >= 0.0
+
+
+def test_span_records_on_exception():
+    obs = _iso_obs()
+    with pytest.raises(RuntimeError):
+        with obs.span("test.boom"):
+            raise RuntimeError("x")
+    assert [e.site for e in obs.ring.events()] == ["test.boom"]
+
+
+def test_ring_bounded():
+    obs = _iso_obs(maxlen=16)
+    for _ in range(100):
+        obs.instant("test.tick")
+    assert len(obs.ring) <= 16
+
+
+def test_jsonl_sink(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    ring = TraceRing(jsonl_path=path)
+    obs = Obs(registry=MetricsRegistry(), ring=ring)
+    with obs.span("test.a", n=1):
+        pass
+    obs.instant("test.b")
+    ring.set_jsonl(None)                       # close
+    rows = [json.loads(line) for line in open(path)]
+    assert [r["site"] for r in rows] == ["test.a", "test.b"]
+    assert rows[0]["kind"] == "span" and rows[1]["kind"] == "instant"
+    assert rows[0]["attrs"] == {"n": 1}
+
+
+# ---------------------------------------------------------------------------
+# overlap report
+
+
+def _ev(site, t0, dur, kind="span", **attrs):
+    return SpanEvent(site, t0, dur, kind, 0, 0, attrs)
+
+
+def test_overlap_frac_synthetic():
+    # compute [0, 10); swap [2, 4) hides fully, swap [12, 14) not at all
+    events = [
+        _ev("engine.tick", 0.0, 10.0, step=7),
+        _ev("lms.swap_in", 2.0, 2.0, cls="params", bytes=100),
+        _ev("pool.prefetch", 12.0, 2.0, cls="kvcache", bytes=50),
+    ]
+    r = overlap_report(events)
+    assert r["overlap_frac"] == pytest.approx(0.5)
+    assert r["swap_s"] == pytest.approx(4.0)
+    assert r["overlapped_s"] == pytest.approx(2.0)
+    assert r["swap_spans"] == 2 and r["compute_spans"] == 1
+    (row,) = r["per_step"]
+    assert row["step"] == 7                    # attrs step wins over index
+    assert row["swap_overlap_s"] == pytest.approx(2.0)
+    assert row["overlap_frac"] == pytest.approx(0.2)
+
+
+def test_overlap_mutually_overlapping_swaps_not_double_counted():
+    events = [
+        _ev("engine.tick", 0.0, 10.0),
+        _ev("lms.swap_in", 2.0, 4.0),          # [2, 6)
+        _ev("lms.swap_out", 4.0, 4.0),         # [4, 8) — overlaps the first
+    ]
+    r = overlap_report(events)
+    # per-step hidden time uses the UNION of swap intervals: [2, 8) = 6s
+    assert r["per_step"][0]["swap_overlap_s"] == pytest.approx(6.0)
+
+
+def test_trace_events_excluded_from_wallclock_but_counted_in_classes():
+    events = [
+        _ev("engine.tick", 0.0, 10.0),
+        _ev("lms.swap_in", 0.0, 0.0, kind="trace", cls="params", bytes=512),
+        _ev("pool.spill", 1.0, 2.0, cls="kvcache", bytes=128),
+    ]
+    r = overlap_report(events)
+    assert r["swap_spans"] == 1                # the trace event is not a span
+    assert r["swap_s"] == pytest.approx(2.0)
+    cls = r["classes"]
+    assert cls["params"] == {"bytes": 512, "events": 1, "span_s": 0.0,
+                             "trace_events": 1, "bytes_per_s": None}
+    assert cls["kvcache"]["bytes"] == 128
+    assert cls["kvcache"]["bytes_per_s"] == pytest.approx(64.0)
+
+
+def test_categorize():
+    assert categorize("engine.tick") == "compute"
+    assert categorize("train.step") == "compute"
+    assert categorize("lms.swap_in") == "swap"
+    assert categorize("pool.prefetch") == "swap"
+    assert categorize("ddl.bucket") == "collective"
+    assert categorize("ckpt.save") == "other"
+
+
+def test_build_obs_report_shape():
+    obs = _iso_obs()
+    with obs.span("engine.tick"):
+        with obs.span("pool.spill", cls="kvcache", bytes=64):
+            pass
+    obs.registry.counter("engine.ticks").inc()
+    r = build_obs_report(obs, meta={"mode": "test"})
+    assert r["schema"] == 1 and r["events"] == 2
+    assert r["event_kinds"]["span"] == 2
+    assert r["swap_spans"] == 1 and "overlap_frac" in r
+    assert r["registry"]["counters"]["engine.ticks"] == 1.0
+    assert r["meta"] == {"mode": "test"}
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+
+
+def test_chrome_trace_well_formed(tmp_path):
+    events = [
+        _ev("engine.tick", 1.0, 0.5),
+        _ev("pool.prefetch", 1.1, 0.2, cls="kvcache"),
+        _ev("ddl.bucket", 1.2, 0.0, kind="trace", buckets=3),
+        _ev("sup.restart", 1.3, 0.0, kind="instant"),
+    ]
+    path = str(tmp_path / "trace.json")
+    doc = export_chrome_trace(events, path)
+    assert json.load(open(path)) == json.loads(json.dumps(doc))
+    tes = doc["traceEvents"]
+    metas = [e for e in tes if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in metas}
+    assert {"repro", "compute", "swap", "collective", "other"} <= names
+    xs = [e for e in tes if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"engine.tick", "pool.prefetch"}
+    # per-category tracks: compute and swap land on distinct tids
+    by_name = {e["name"]: e for e in tes if e["ph"] in ("X", "i")}
+    assert by_name["engine.tick"]["tid"] != by_name["pool.prefetch"]["tid"]
+    # timestamps are relative microseconds from the earliest event
+    assert by_name["engine.tick"]["ts"] == pytest.approx(0.0)
+    assert by_name["pool.prefetch"]["ts"] == pytest.approx(0.1e6)
+    assert by_name["engine.tick"]["dur"] == pytest.approx(0.5e6)
+    instants = [e for e in tes if e["ph"] == "i"]
+    assert {e["name"] for e in instants} == {"ddl.bucket", "sup.restart"}
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+
+
+def test_spike_detector_fires_on_spike_not_plateau():
+    det = SpikeDetector(window=32, factor=6.0, min_delta=0.1, min_steps=8)
+    rng = np.random.default_rng(0)
+    # a noisy plateau around 1.0 never alerts
+    for i in range(50):
+        assert det.observe(i, 1.0 + 0.01 * rng.standard_normal()) is None
+    alert = det.observe(50, 9.0)
+    assert isinstance(alert, TelemetryAlert)
+    assert alert.step == 50 and alert.value == 9.0
+    assert alert.threshold < 9.0
+    d = alert.to_dict()
+    assert d["kind"] == "loss_spike" and d["step"] == 50
+
+
+def test_spike_detector_warmup():
+    det = SpikeDetector(min_steps=8)
+    for i in range(7):
+        assert det.observe(i, 1.0) is None
+    # window < min_steps: even a wild value stays silent
+    assert det.observe(7, 100.0) is None
+
+
+def test_telemetry_loop_actions():
+    obs = _iso_obs()
+    seen = []
+    loop = TelemetryLoop(detector=SpikeDetector(min_steps=2, min_delta=0.1),
+                         action="stop", on_alert=[seen.append], obs=obs)
+    for i in range(5):
+        loop.observe(i, {"loss": 1.0})
+    assert not loop.stop_requested
+    loop.observe(5, {"loss": 50.0})
+    assert loop.stop_requested
+    assert len(seen) == 1 and len(loop.alerts) == 1
+    assert obs.registry.counter("telemetry.alerts").value == 1.0
+    assert [e.site for e in obs.ring.events()] == ["telemetry.alert"]
+
+    raising = TelemetryLoop(
+        detector=SpikeDetector(min_steps=2, min_delta=0.1), action="raise")
+    raising.observe(0, {"loss": 1.0})
+    raising.observe(1, {"loss": 1.0})
+    with pytest.raises(TelemetryAlert):
+        raising.observe(2, {"loss": 50.0})
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: log_every flush + telemetry early-stop
+
+
+def _tcfg(tmp_path, steps, **kw):
+    from repro.config.base import (DDLConfig, LMSConfig, MeshSpec,
+                                   ShapeConfig, TrainConfig)
+    from repro.configs import get_smoke_config
+    return TrainConfig(
+        model=get_smoke_config("olmo-1b"),
+        shape=ShapeConfig("t", "train", 32, 4),
+        mesh=MeshSpec((1, 1), ("data", "model")),
+        lms=LMSConfig(enabled=True), ddl=DDLConfig(mode="none"),
+        learning_rate=5e-3, warmup_steps=2, total_steps=steps,
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=100,
+        async_checkpoint=False, **kw)
+
+
+def test_trainer_log_every_flush_order(tmp_path):
+    from repro.train.trainer import Trainer
+    obs = _iso_obs()
+    tr = Trainer(_tcfg(tmp_path, steps=5, log_every=3), attn_impl="naive",
+                 obs=obs)
+    seen = []
+    _, hist = tr.train(on_step=lambda s, m: seen.append(s))
+    # every step logged despite the batched flush, in order
+    assert [m["step"] for m in hist] == [1, 2, 3, 4, 5]
+    assert seen == [1, 2, 3, 4, 5]
+    spans = [e for e in obs.ring.events() if e.site == "train.step"]
+    assert len(spans) == 5
+    assert len(obs.registry.series("train.history")) == 5
+    assert obs.registry.histogram("train.step_s").count == 5
+
+
+class _SpikeAt:
+    """Stub detector: alerts from a fixed step on."""
+
+    def __init__(self, at):
+        self.at = at
+
+    def observe(self, step, value):
+        if step >= self.at:
+            return TelemetryAlert("loss_spike", step, float(value), 0.0, 0.0)
+        return None
+
+
+def test_trainer_telemetry_early_stop(tmp_path):
+    from repro.train.trainer import Trainer
+    loop = TelemetryLoop(detector=_SpikeAt(2), action="stop")
+    tr = Trainer(_tcfg(tmp_path, steps=8), attn_impl="naive",
+                 obs=_iso_obs(), telemetry=loop)
+    _, hist = tr.train()
+    assert [m["step"] for m in hist] == [1, 2]   # stopped at the alert
+    assert loop.alerts and loop.stop_requested
+    # the early-stop checkpointed before exiting
+    assert tr.ckpt.latest_step() == 2

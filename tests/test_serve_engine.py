@@ -352,6 +352,38 @@ def test_engine_tpot_metrics(setup):
         assert r.done_mono >= r.first_tok_mono
 
 
+def test_engine_metrics_keys_stable_over_registry(setup):
+    """metrics() is a stable surface: re-expressing it over the obs
+    registry (DESIGN.md §12) must keep the exact key set callers consume
+    (launch/serve.py, bench_serve, downstream dashboards)."""
+    cfg, mesh, model, reqs, params, _ = setup
+    eng = ServeEngine(model, mesh, slots=SLOTS, max_len=TOTAL,
+                      page_size=PAGE, prefill_chunk=CHUNK, params=params)
+    eng.run(_fresh_requests(reqs))
+    m = eng.metrics()
+    expected = {"requests", "ticks", "decode_tokens", "decode_tok_s",
+                "mean_concurrency", "wall_s",
+                "ok", "rejected", "timeout", "cancelled", "failed",
+                "preempted", "ttft_mean_s", "ttft_p95_s",
+                "tpot_p50_s", "tpot_p95_s"}
+    pool_keys = {f"pool_{k}" for k in eng.pool.stats}
+    assert expected | pool_keys <= set(m.keys())
+    assert all(isinstance(v, float) for v in m.values())
+    # the registry holds the same values under its own (dotted) names
+    snap = eng.obs.registry.snapshot()
+    assert snap["counters"]["engine.ticks"] == m["ticks"]
+    assert snap["counters"]["engine.req.ok"] == m["ok"]
+    assert snap["counters"]["engine.requests"] == m["requests"]
+    assert snap["gauges"]["engine.wall_s"] == m["wall_s"]
+    assert snap["histograms"]["engine.ttft_s"]["p95"] == \
+        pytest.approx(m["ttft_p95_s"])
+    # and the run left real swap spans on the shared timeline
+    from repro.obs import categorize, get_obs
+    sites = [e.site for e in get_obs().ring.events()]
+    assert any(categorize(s) == "swap" for s in sites)
+    assert any(s == "engine.tick" for s in sites)
+
+
 def test_engine_arrival_zero_is_preserved(setup):
     """arrival == 0.0 is a legitimate trace-relative timestamp: the engine
     must not overwrite it with trace start (the old `or t0` bug), which
