@@ -123,6 +123,7 @@ def main() -> None:
         modules = [
             ("fig1", b["bench_ddl_allreduce"].run),
             ("fig2b", b["bench_lms_overhead"].run),
+            ("fig2bc", b["bench_lms_overhead"].run_calibrated),
             ("fig2bo", b["bench_lms_overhead"].run_opt_stream_measured),
             ("tab1", b["bench_scaling"].run),
             ("serve", b["bench_serve"].run),
@@ -132,6 +133,7 @@ def main() -> None:
             ("fig1", b["bench_ddl_allreduce"].run),
             ("fig1m", b["bench_ddl_allreduce"].run_measured),
             ("fig2b", b["bench_lms_overhead"].run),
+            ("fig2bc", b["bench_lms_overhead"].run_calibrated),
             ("fig2bm", b["bench_lms_overhead"].run_measured),
             ("fig2bo", b["bench_lms_overhead"].run_opt_stream_measured),
             ("tab1", b["bench_scaling"].run),

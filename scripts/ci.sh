@@ -61,12 +61,33 @@ assert any(r["table"] == "serve" and r["name"].startswith("serve_engine_int8")
            for r in rows), "bench_serve int8 row missing from BENCH_smoke"
 assert any(r["table"] == "serve" and r["name"].startswith("serve_engine_faults")
            for r in rows), "bench_serve faulted row missing from BENCH_smoke"
+# Planner v2 (DESIGN.md §13): the calibrated replanning row must land AND
+# strictly reduce modeled overhead vs the static-priced plan
+cal = [r for r in rows if r["name"] == "lms_overhead_calibrated_1.0x"]
+assert cal, "calibrated replanning row missing from BENCH_smoke"
+import re
+m = re.search(r"drop=(-?[\d.]+)pp", cal[0]["derived"])
+assert m, f"calibrated row has no drop field: {cal[0]['derived']}"
+assert float(m.group(1)) > 0, \
+    f"calibrated plan did not reduce overhead: {cal[0]['derived']}"
 EOF
+
+echo "== Planner v2 calibration loop (DESIGN.md §13) =="
+# close measure -> replan -> re-audit on this runner: feed the bench run's
+# measured obs_report.json (+ the jaxpr auditor's analysis_report.json)
+# through the unified planning facade and hold both calibration promises —
+# the calibrated plan's audited live-bytes delta (JXA005) is no worse than
+# the uncalibrated plan's, and a replanned schedule that actually streams
+# still passes check_schedule_invariant with the concrete step attached
+test -s obs_report.json
+python -m repro.analysis.calibrate --profile obs_report.json \
+    --analysis analysis_report.json
 
 echo "== observability smoke (DESIGN.md §12) =="
 # drive the instrumented train + serve paths with the JSONL sink on, then
 # assert the obs report carries the fields Planner v2 consumes: nonzero
 # swap spans, overlap_frac, per-residency-class swap bytes
+rm -rf /tmp/ci_obs_ckpt  # stale checkpoints would resume past --steps
 python -m repro.launch.train --arch olmo-1b --smoke --steps 2 --batch 2 \
     --seq 32 --ckpt-dir /tmp/ci_obs_ckpt --log-every 2 \
     --obs-jsonl /tmp/ci_obs_train.jsonl > /dev/null

@@ -16,8 +16,9 @@ Two passes, both CI gates:
 `run` drives both over every step builder and writes
 `analysis_report.json` for Planner v2 / CI artifacts.
 """
-from repro.analysis.report import AnalysisReport, Finding, StepAudit
+from repro.analysis.report import (AnalysisReport, Finding, StepAudit,
+                                   load_analysis_report, step_plan_deltas)
 from repro.analysis.jaxpr_audit import audit_step, aval_fingerprint
 
 __all__ = ["AnalysisReport", "Finding", "StepAudit", "audit_step",
-           "aval_fingerprint"]
+           "aval_fingerprint", "load_analysis_report", "step_plan_deltas"]

@@ -1,0 +1,172 @@
+"""CI driver for the Planner v2 calibration loop (DESIGN.md §13).
+
+    python -m repro.analysis.calibrate --profile obs_report.json \
+        --analysis analysis_report.json
+
+Closes the measure -> replan -> re-audit loop on the CPU runner: load the
+bench/obs smoke run's measured profile into a CostModel, replan the smoke
+training config against it, and hold the two promises the calibrated
+planner makes:
+
+1. JXA005 feedback tightens, never loosens — the calibrated plan's
+   audited live-bytes delta (jaxpr-audit peak vs plan peak) is no worse
+   than the uncalibrated plan's on the identical step.
+2. Replanned schedules still conform — a calibrated plan tight enough to
+   actually stream passes `check_schedule_invariant` WITH the concrete
+   jitted step attached (plan self-consistency + jaxpr conformance in one
+   call: donation aliased, host leaves never re-materialized, scan
+   transfers only where the schedule streams).
+
+Backend-free (abstract tracing only); exits 1 on any violated promise.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_audit import audit_step
+from repro.config.base import (DDLConfig, LMSConfig, MeshSpec, ShapeConfig,
+                               TrainConfig)
+from repro.configs import get_smoke_config
+from repro.core.lms.costmodel import CostModel
+from repro.core.lms.planner import (PlanRequest, check_schedule_invariant,
+                                    plan as plan_lms)
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+
+S = jax.ShapeDtypeStruct
+
+
+def _f32(s):
+    return S(s.shape, jnp.float32)
+
+
+def _train_env(arch: str, seq: int, batch: int):
+    """The same smoke tracing environment analysis/run.py audits."""
+    from repro.optim.adamw import AdamState
+    from repro.train.steps import TrainState
+    cfg = get_smoke_config(arch)
+    mspec = MeshSpec((1, 1), ("data", "model"))
+    mesh = make_mesh(mspec)
+    model = Model(cfg, attn_impl="naive")
+    shape = ShapeConfig("cal_train", "train", seq, batch)
+    pshapes, _ = model.abstract_params(mesh)
+    state_abs = TrainState(
+        step=S((), jnp.int32), params=pshapes,
+        opt=AdamState(step=S((), jnp.int32),
+                      mu=jax.tree.map(_f32, pshapes),
+                      nu=jax.tree.map(_f32, pshapes),
+                      master=jax.tree.map(_f32, pshapes)))
+    bspecs, _ = model.input_specs(shape, mesh)
+    return cfg, mspec, mesh, model, shape, pshapes, state_abs, bspecs
+
+
+def _build_and_audit(name, model, mesh, shape, mspec, plan, state_abs,
+                     bspecs, pshapes):
+    from repro.train.steps import StepSpec, build_train_step
+    tcfg = TrainConfig(model=model.cfg, shape=shape, mesh=mspec,
+                       ddl=DDLConfig(mode="allreduce"))
+    fn, _, _ = build_train_step(model, tcfg, mesh,
+                                spec=StepSpec(plan=plan, donate=True))
+    host = []
+    if plan.residency.get("params") == "host":
+        host.extend(jax.tree_util.tree_leaves(pshapes))
+    if plan.residency.get("optimizer") == "host":
+        host.extend(jax.tree_util.tree_leaves(state_abs.opt))
+    sched = plan.swap_schedule
+    audit = audit_step(name, fn, (state_abs, bspecs), expect_donation=True,
+                       host_avals=host,
+                       allow_scan_transfers=bool(
+                           sched is not None and sched.stream),
+                       plan_peak_bytes=plan.peak_bytes)
+    return fn, audit
+
+
+def run_calibration_gate(profile: str, analysis: str = "",
+                         arch: str = "olmo-1b", *, seq: int = 32,
+                         batch: int = 2) -> int:
+    cost = CostModel.load(profile, analysis_path=analysis or None)
+    print(f"[calibrate] {cost.describe()}")
+    (cfg, mspec, mesh, model, shape, pshapes, state_abs,
+     bspecs) = _train_env(arch, seq, batch)
+
+    req = PlanRequest(cfg=cfg, shape=shape, mesh=mspec,
+                      lms=LMSConfig(enabled=True))
+    plan_uncal = plan_lms(req)
+    plan_cal = plan_lms(req, profile=cost)
+    if not plan_cal.calibrated:
+        print("[calibrate] FAIL: profile did not mark the plan calibrated")
+        return 1
+
+    failures = 0
+    _, a_uncal = _build_and_audit("cal_train_uncal", model, mesh, shape,
+                                  mspec, plan_uncal, state_abs, bspecs,
+                                  pshapes)
+    _, a_cal = _build_and_audit("cal_train_cal", model, mesh, shape, mspec,
+                                plan_cal, state_abs, bspecs, pshapes)
+    du, dc = a_uncal.plan_delta_bytes, a_cal.plan_delta_bytes
+    print(f"[calibrate] JXA005 delta: uncalibrated {du / 2**20:+.2f} MiB, "
+          f"calibrated {dc / 2**20:+.2f} MiB")
+    if dc > du:
+        print("[calibrate] FAIL: calibrated plan's audited live-bytes delta "
+              "is WORSE than the uncalibrated plan's")
+        failures += 1
+
+    # a budget tight enough to force streaming: the replanned schedule must
+    # still pass the invariant with the concrete step attached
+    tight = LMSConfig(enabled=True, hbm_budget=max(plan_uncal.peak_bytes // 8,
+                                                   1 << 20))
+    plan_tight = plan_lms(
+        PlanRequest(cfg=cfg, shape=shape, mesh=mspec, lms=tight),
+        profile=cost)
+    sched = plan_tight.swap_schedule
+    streams = tuple(sched.stream) if sched is not None else ()
+    print(f"[calibrate] tight-budget plan streams {streams or '(nothing)'} "
+          f"at depth {sched.prefetch_depth if sched is not None else '-'}")
+    if not streams:
+        print("[calibrate] FAIL: tight-budget plan streams nothing — the "
+              "conformance leg checks an empty promise")
+        failures += 1
+    else:
+        fn_t, _ = _build_and_audit("cal_train_tight", model, mesh, shape,
+                                   mspec, plan_tight, state_abs, bspecs,
+                                   pshapes)
+        host = []
+        if plan_tight.residency.get("params") == "host":
+            host.extend(jax.tree_util.tree_leaves(pshapes))
+        if plan_tight.residency.get("optimizer") == "host":
+            host.extend(jax.tree_util.tree_leaves(state_abs.opt))
+        try:
+            check_schedule_invariant(
+                plan_tight.residency, sched,
+                step_fn=fn_t, step_args=(state_abs, bspecs),
+                host_avals=host, expect_donation=True,
+                step_name="cal_train_tight")
+            print("[calibrate] tight-budget calibrated plan conforms "
+                  "(schedule invariant + jaxpr audit)")
+        except AssertionError as e:
+            print(f"[calibrate] FAIL: {e}")
+            failures += 1
+
+    print("[calibrate] " + ("OK" if not failures
+                            else f"{failures} violated promise(s)"))
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", required=True,
+                    help="obs_report.json from a measured run")
+    ap.add_argument("--analysis", default="",
+                    help="analysis_report.json for JXA005 live-bytes "
+                         "margins (optional)")
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args(argv)
+    return run_calibration_gate(args.profile, args.analysis, args.arch)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

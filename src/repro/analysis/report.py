@@ -122,3 +122,25 @@ class AnalysisReport:
                      f"{len(self.all_findings()) - len(gating)} "
                      "waived/advisory")
         return "\n".join(lines)
+
+
+def load_analysis_report(path: str) -> Dict:
+    """Read ``analysis_report.json`` back as a calibration input, validating
+    the keys Planner v2 consumes (the per-step audits with their JXA005
+    ``plan_delta_bytes``). Raises ValueError on a file that is not an
+    analysis report."""
+    from repro.core.lms.costmodel import validate_analysis_report
+    with open(path) as f:
+        return validate_analysis_report(json.load(f))
+
+
+def step_plan_deltas(report: Dict) -> Dict[str, int]:
+    """{step name: plan_delta_bytes} for every audited step that was priced
+    against a plan — the live-bytes margins CostModel.live_margin folds
+    back into calibrated budgets."""
+    out: Dict[str, int] = {}
+    for s in report.get("steps", []):
+        d = s.get("plan_delta_bytes")
+        if d is not None and s.get("name"):
+            out[str(s["name"])] = int(d)
+    return out

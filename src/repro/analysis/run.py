@@ -74,9 +74,10 @@ def slot_decode_builder(model, cfg, mspec, mesh, *, slots, max_len, page,
                         and kvp.device_pages else slots * (max_len // page))
         arena = PageArena(page_size=page, device_pages=device_pages,
                           slots=slots, max_pages=max_len // page)
-    fn, _, _, _ = build_slot_decode_step(model, dshape, mesh, plan=plan,
-                                         donate=True, kv_dtype=kv_dtype,
-                                         arena=arena)
+    from repro.train.steps import StepSpec
+    fn, _, _, _ = build_slot_decode_step(
+        model, dshape, mesh,
+        spec=StepSpec(plan=plan, donate=True, kv_dtype=kv_dtype, arena=arena))
     cavals, cspecs = model.cache_abstract(dshape, mesh)
     if kvquant.is_int8(kv_dtype):
         cavals, cspecs = kvquant.quantize_cache_abstract(
@@ -98,9 +99,9 @@ def audit_all_steps(arch: str = "olmo-1b", *, seq: int = 32, batch: int = 2,
     tests: big enough to exercise scans/pages, small enough to trace in
     seconds."""
     from repro.optim.adamw import AdamState
-    from repro.train.steps import (TrainState, Zero1State, build_decode_step,
-                                   build_prefill_step, build_train_step,
-                                   build_zero1_train_step)
+    from repro.train.steps import (StepSpec, TrainState, Zero1State,
+                                   build_decode_step, build_prefill_step,
+                                   build_train_step, build_zero1_train_step)
     cfg = get_smoke_config(arch)
     mspec = MeshSpec((1, 1), ("data", "model"))
     mesh = make_mesh(mspec)
@@ -113,7 +114,8 @@ def audit_all_steps(arch: str = "olmo-1b", *, seq: int = 32, batch: int = 2,
     tplan = plan_memory(cfg, tshape, mspec, LMSConfig(enabled=True))
     tcfg = TrainConfig(model=cfg, shape=tshape, mesh=mspec,
                        ddl=DDLConfig(mode="allreduce"))
-    fn, _, _ = build_train_step(model, tcfg, mesh, plan=tplan, donate=True)
+    fn, _, _ = build_train_step(model, tcfg, mesh,
+                                spec=StepSpec(plan=tplan, donate=True))
     state_abs = TrainState(
         step=S((), jnp.int32), params=pshapes,
         opt=AdamState(step=S((), jnp.int32),
@@ -133,8 +135,8 @@ def audit_all_steps(arch: str = "olmo-1b", *, seq: int = 32, batch: int = 2,
                         zero1=True)
     zcfg = TrainConfig(model=cfg, shape=tshape, mesh=mspec,
                        ddl=DDLConfig(mode="zero1"))
-    zfn, _, _, packspec = build_zero1_train_step(model, zcfg, mesh,
-                                                 plan=zplan, donate=True)
+    zfn, _, _, packspec = build_zero1_train_step(
+        model, zcfg, mesh, spec=StepSpec(plan=zplan, donate=True))
     flat = S((packspec.padded,), jnp.float32)
     zstate = Zero1State(step=S((), jnp.int32), params=pshapes,
                         mu=flat, nu=flat, master=flat)
@@ -148,7 +150,8 @@ def audit_all_steps(arch: str = "olmo-1b", *, seq: int = 32, batch: int = 2,
     # --- prefill (no donation by design: the cache is born here)
     pshape = ShapeConfig("a_prefill", "prefill", max_len, slots)
     pplan = plan_memory(cfg, pshape, mspec, LMSConfig(enabled=True))
-    pfn, _, _, _ = build_prefill_step(model, pshape, mesh, plan=pplan)
+    pfn, _, _, _ = build_prefill_step(model, pshape, mesh,
+                                      spec=StepSpec(plan=pplan))
     pb, _ = model.input_specs(pshape, mesh)
     pb = {k: v for k, v in pb.items() if k not in ("pos", "labels")}
     audits.append(audit_step(
@@ -159,8 +162,8 @@ def audit_all_steps(arch: str = "olmo-1b", *, seq: int = 32, batch: int = 2,
     # --- static whole-batch decode (donates the cache)
     dshape = ShapeConfig("a_decode", "decode", max_len, slots)
     dplan = plan_memory(cfg, dshape, mspec, LMSConfig(enabled=True))
-    dfn, _, _, _ = build_decode_step(model, dshape, mesh, plan=dplan,
-                                     donate=True)
+    dfn, _, _, _ = build_decode_step(model, dshape, mesh,
+                                     spec=StepSpec(plan=dplan, donate=True))
     cavals, _ = model.cache_abstract(dshape, mesh)
     db, _ = model.input_specs(dshape, mesh)
     dpos = db.pop("pos")

@@ -220,7 +220,10 @@ class LMSConfig:
 class DDLConfig:
     mode: str = "allreduce"           # "allreduce" (paper) | "zero1" (beyond) | "none"
     compress_dcn: bool = False        # int8 + error feedback on pod hop
-    bucket_mb: int = 64               # gradient bucketing for overlap
+    # gradient bucketing for overlap. None = auto: the executor's default
+    # 64 MiB, or the calibrated plan's tuned_bucket_mb when a Planner v2
+    # profile priced one. An explicit integer always wins over the planner.
+    bucket_mb: Optional[int] = None
     topology_aware: bool = True       # False => flat NCCL-style single all-reduce
     # per-layer reduction inside the backward scan (core/ddl/overlap.py)
     # vs a post-hoc tree pass. None = auto: follow the LMS planner's priced

@@ -70,9 +70,18 @@ from repro.core.ddl.allreduce import (_leaf_is_replicated, ddl_reduce_leaf,
 from repro.obs import get_obs
 
 
+# executor default when DDLConfig.bucket_mb is None (auto) and no
+# calibrated plan tuned it
+DEFAULT_BUCKET_MB = 64
+
+
 def _bucket_elems(cfg: DDLConfig) -> int:
-    """DDLConfig.bucket_mb in f32 elements (reductions run in f32)."""
-    return max(int(cfg.bucket_mb) * (1 << 20) // 4, 1)
+    """DDLConfig.bucket_mb in f32 elements (reductions run in f32).
+    bucket_mb=None means auto — the step builders substitute a calibrated
+    plan's tuned_bucket_mb before the cfg reaches here; untouched it is the
+    executor default."""
+    mb = DEFAULT_BUCKET_MB if cfg.bucket_mb is None else int(cfg.bucket_mb)
+    return max(mb * (1 << 20) // 4, 1)
 
 
 def _flat_f32(x) -> jnp.ndarray:

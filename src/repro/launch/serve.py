@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.config.base import MeshSpec, ShapeConfig
 from repro.configs import get_config, get_smoke_config
+from repro.core.lms.planner import PlanRequest, plan as plan_lms
 from repro.launch.mesh import make_mesh
 from repro.models import kvquant
 from repro.models.model import Model
@@ -26,7 +27,8 @@ from repro.obs import (configure, export_chrome_trace, get_obs,
                        write_obs_report)
 from repro.serve import (ServeEngine, decode_step_batch,
                          static_batch_from_requests, synth_requests)
-from repro.train.steps import build_decode_step, build_prefill_step
+from repro.train.steps import (StepSpec, build_decode_step,
+                               build_prefill_step)
 
 
 def run_static(model, mesh, reqs, prompt_len: int, gen: int, params=None):
@@ -38,11 +40,11 @@ def run_static(model, mesh, reqs, prompt_len: int, gen: int, params=None):
     n = len(reqs)
     total = prompt_len + gen
     prefill_shape = ShapeConfig("serve_prefill", "prefill", prompt_len, n)
-    prefill_fn, params_sh, _, _ = build_prefill_step(model, prefill_shape,
-                                                     mesh, cache_len=total)
+    prefill_fn, params_sh, _, _ = build_prefill_step(
+        model, prefill_shape, mesh, spec=StepSpec(cache_len=total))
     decode_shape = ShapeConfig("serve", "decode", total, n)
     decode_fn, _, _, _ = build_decode_step(model, decode_shape, mesh,
-                                           donate=True)
+                                           spec=StepSpec(donate=True))
     if params is None:
         params = jax.device_put(model.init(jax.random.key(0)), params_sh)
     batch = static_batch_from_requests(cfg, reqs)
@@ -103,7 +105,14 @@ def main(argv=None):
                         "/ Perfetto) at exit")
     p.add_argument("--obs-report", default="",
                    help="write the overlap/swap obs report JSON at exit")
+    p.add_argument("--profile", default="",
+                   help="Planner v2 calibration: size the paged pool and "
+                        "staging depth from the measured bandwidths in this "
+                        "obs_report.json (a prior run's --obs-report output)")
     args = p.parse_args(argv)
+    if args.static and args.profile:
+        p.error("--profile plans the engine's paged pool; the --static "
+                "baseline loop is unplanned")
     if args.static and (args.temperature > 0 or args.top_k):
         p.error("--temperature/--top-k sample in the engine only; the "
                 "--static baseline loop is greedy by construction")
@@ -131,8 +140,18 @@ def main(argv=None):
     configure(jsonl_path=args.obs_jsonl or None)
     obs = get_obs()
     total = args.prompt_len + args.gen
-    eng = ServeEngine(model, mesh, slots=min(args.slots, args.requests),
-                      max_len=total, page_size=args.page_size,
+    slots = min(args.slots, args.requests)
+    plan = None
+    if args.profile:
+        plan = plan_lms(PlanRequest(
+            cfg=cfg, shape=ShapeConfig("cli_serve", "decode", total,
+                                       args.requests),
+            mesh=mesh_spec, serve=True, slots=slots,
+            page_size=args.page_size, kv_dtype=args.kv_dtype),
+            profile=args.profile)
+        print(plan.summary())
+    eng = ServeEngine(model, mesh, slots=slots,
+                      max_len=total, plan=plan, page_size=args.page_size,
                       prefill_chunk=args.prefill_chunk,
                       temperature=args.temperature, top_k=args.top_k,
                       kv_dtype=args.kv_dtype, obs=obs)

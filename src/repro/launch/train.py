@@ -62,6 +62,11 @@ def main(argv=None):
                         "/ Perfetto) at exit")
     p.add_argument("--obs-report", default="",
                    help="write the overlap/swap obs report JSON at exit")
+    p.add_argument("--profile", default="",
+                   help="Planner v2 calibration: plan from the measured "
+                        "bandwidths/overlap in this obs_report.json (a "
+                        "prior run's --obs-report output) instead of "
+                        "hardware constants")
     p.add_argument("--spike-action", default="off",
                    choices=["off", "record", "stop"],
                    help="loss-spike telemetry: record alerts, or stop the "
@@ -134,7 +139,10 @@ def main(argv=None):
                   f"in {res.attempts} attempts")
     else:
         trainer = Trainer(tcfg, heartbeat_dir=args.heartbeat_dir or None,
-                          injector=injector, obs=obs, telemetry=telemetry)
+                          injector=injector, obs=obs, telemetry=telemetry,
+                          profile=args.profile or None)
+        if trainer.plan is not None and trainer.plan.calibrated:
+            print(trainer.plan.summary())
         state, hist = trainer.train(steps=args.steps, on_step=log)
     if args.log:
         with open(args.log, "w") as f:

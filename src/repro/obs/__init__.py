@@ -9,8 +9,8 @@ auditor sees zero new primitives from instrumentation.
 from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
                                 Series)
 from repro.obs.report import (build_obs_report, categorize,
-                              export_chrome_trace, overlap_report,
-                              write_obs_report)
+                              export_chrome_trace, load_obs_report,
+                              overlap_report, write_obs_report)
 from repro.obs.sites import SITE_PREFIXES, SITE_RE, check_site
 from repro.obs.telemetry import SpikeDetector, TelemetryAlert, TelemetryLoop
 from repro.obs.trace import (Obs, SpanEvent, TraceRing, configure, get_obs,
@@ -19,7 +19,7 @@ from repro.obs.trace import (Obs, SpanEvent, TraceRing, configure, get_obs,
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Series",
     "build_obs_report", "categorize", "export_chrome_trace",
-    "overlap_report", "write_obs_report",
+    "load_obs_report", "overlap_report", "write_obs_report",
     "SITE_PREFIXES", "SITE_RE", "check_site",
     "SpikeDetector", "TelemetryAlert", "TelemetryLoop",
     "Obs", "SpanEvent", "TraceRing", "configure", "get_obs", "instant",

@@ -164,6 +164,17 @@ def write_obs_report(path: str, obs: Optional[Obs] = None,
     return report
 
 
+def load_obs_report(path: str) -> dict:
+    """Read ``obs_report.json`` back as a calibration input, validating the
+    schema version and the keys Planner v2 prices from (raises ValueError on
+    a mismatched or truncated file — a stale/foreign report must not
+    silently calibrate a plan). The validator lives with the CostModel so
+    reader and writer share one schema constant."""
+    from repro.core.lms.costmodel import validate_obs_report
+    with open(path) as f:
+        return validate_obs_report(json.load(f))
+
+
 # ---------------------------------------------------------------------------
 # Chrome trace_event export
 

@@ -33,6 +33,7 @@ request's samples do not depend on which slots it happened to share ticks
 with."""
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from typing import Dict, List, Optional, Sequence
@@ -43,7 +44,6 @@ import numpy as np
 
 from repro.config.base import ShapeConfig
 from repro.core.lms.planner import MemoryPlan
-from repro.models import kvquant
 from repro.models.model import Model
 from repro.models.paging import PageArena
 from repro.obs import Obs
@@ -52,7 +52,7 @@ from repro.serve.batching import (decode_step_batch, request_prefill_batch,
                                   request_prompt_len)
 from repro.serve.kvpool import PagedKVPool
 from repro.serve.scheduler import Request, Scheduler
-from repro.train.steps import build_slot_decode_step
+from repro.train.steps import StepSpec, build_slot_decode_step
 
 
 class ServeEngine:
@@ -89,12 +89,11 @@ class ServeEngine:
         # kv_dtype resolution: explicit arg > the planner's priced knob >
         # model width. int8 halves the page budget bytes and the pinned-host
         # arena (pool boundary quantization + per-row scales, DESIGN.md §8).
-        # The priced knob is VALIDATED, not pattern-matched: any dtype the
-        # planner prices is honored, and an unknown one raises instead of
-        # silently degrading to model width.
-        if kv_dtype is None:
-            kv_dtype = (kvquant.validate_kv_dtype(paging.kv_dtype)
-                        if paging is not None else "model")
+        # The resolution order and its validation live in ONE place —
+        # StepSpec.resolved_kv_dtype() — shared with every step builder, so
+        # an unknown priced dtype raises instead of silently degrading.
+        spec = StepSpec(plan=plan, donate=True, kv_dtype=kv_dtype)
+        kv_dtype = spec.resolved_kv_dtype()
         self.kv_dtype = kv_dtype
 
         # page-arena geometry must be settled BEFORE the step builds: the
@@ -121,9 +120,17 @@ class ServeEngine:
 
         shape = ShapeConfig("serve_slots", "decode", max_len, slots)
         (self._decode_fn, params_sh, _,
-         cache_sh) = build_slot_decode_step(model, shape, mesh, plan=plan,
-                                            donate=True, kv_dtype=kv_dtype,
-                                            arena=arena)
+         cache_sh) = build_slot_decode_step(
+            model, shape, mesh,
+            spec=dataclasses.replace(spec, arena=arena))
+        # staging window for the spill double buffer: a CALIBRATED plan
+        # that streams the KV class carries a measured-bandwidth-tuned
+        # prefetch depth; a static plan keeps the legacy one-ahead buffer
+        sched = plan.swap_schedule if plan is not None else None
+        self._stage_depth = (max(1, sched.prefetch_depth)
+                             if plan is not None and plan.calibrated
+                             and sched is not None
+                             and "kvcache" in sched.stream else 1)
         self.pool = PagedKVPool(model, slots=slots, max_len=max_len,
                                 page_size=page_size,
                                 device_pages=device_pages,
@@ -451,12 +458,19 @@ class ServeEngine:
         return progressed
 
     def _prefetch_next(self) -> None:
-        """Double buffer: stage the next waiting request's spilled pages
-        back toward the device while the decode tick computes."""
+        """Double buffer: stage the next waiting requests' spilled pages
+        back toward the device while the decode tick computes. Stages up to
+        `_stage_depth` requests per call (1 unless a calibrated plan tuned
+        the window deeper); stops early when the device budget refuses a
+        claim — deeper staging cannot proceed past an exhausted budget."""
+        staged = 0
         for req in self.scheduler.queue:
             if self.pool.status(req.rid) == "host":
-                self.pool.prefetch(req.rid)
-                return
+                if not self.pool.prefetch(req.rid):
+                    return
+                staged += 1
+                if staged >= self._stage_depth:
+                    return
 
     # ---- decode -----------------------------------------------------------
     def _fail_active(self, reason: str) -> None:

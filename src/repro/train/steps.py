@@ -33,8 +33,10 @@ sweep reads it back layer by layer).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
+from dataclasses import dataclass
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -44,7 +46,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.config.base import ShapeConfig, TrainConfig
+from repro.config.base import DDLConfig, ShapeConfig, TrainConfig
 from repro.core.ddl.allreduce import (ddl_reduce_tree,
                                       hierarchical_reduce_scatter_flat,
                                       pack, pack_spec, unpack, PackSpec)
@@ -69,6 +71,47 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
     params: Any
     opt: Any
+
+
+@dataclass(frozen=True)
+class StepSpec:
+    """The unified argument surface of every ``build_*_step`` builder: one
+    object instead of five divergent kwarg piles (plan, donate, rules,
+    kv_dtype, arena, overlap_grads, cache_len) threaded positionally by
+    ServeEngine / launch / benchmarks / tests. Each builder also still
+    accepts its legacy kwargs (which it folds into a spec), so existing
+    callers keep working; fields a given builder does not use are ignored.
+
+    kv_dtype=None means "resolve from the plan": the plan's KVPagingPlan
+    width when one exists, else model width — the arg-vs-plan resolution
+    that used to live ad hoc inside ServeEngine.__init__."""
+    plan: Optional[MemoryPlan] = None
+    donate: bool = True
+    rules: Optional[dict] = None
+    kv_dtype: Optional[str] = None      # None = resolve from plan
+    arena: Any = None                   # models/paging.PageArena, slot decode
+    overlap_grads: Optional[bool] = None
+    cache_len: Optional[int] = None     # prefill: emitted cache capacity
+
+    def resolved_kv_dtype(self) -> str:
+        """Explicit kv_dtype > the plan's paged-pool width > model width;
+        validated either way so a typo raises here, not at trace time."""
+        if self.kv_dtype is not None:
+            return kvquant.validate_kv_dtype(self.kv_dtype)
+        kv_paging = self.plan.kv_paging if self.plan is not None else None
+        if kv_paging is not None:
+            return kvquant.validate_kv_dtype(kv_paging.kv_dtype)
+        return "model"
+
+    def ddl_for(self, tcfg: TrainConfig) -> DDLConfig:
+        """The DDL config the step executes with: a calibrated plan's
+        tuned_bucket_mb substitutes for bucket_mb=None (auto); an explicit
+        user bucket always wins."""
+        if (tcfg.ddl.bucket_mb is None and self.plan is not None
+                and self.plan.calibrated and self.plan.tuned_bucket_mb):
+            return dataclasses.replace(tcfg.ddl,
+                                       bucket_mb=self.plan.tuned_bucket_mb)
+        return tcfg.ddl
 
 
 def _param_stream(plan: Optional[MemoryPlan]):
@@ -345,8 +388,15 @@ def _microbatch_split(batch, m: int):
 def build_train_step(model: Model, tcfg: TrainConfig, mesh,
                      plan: Optional[MemoryPlan] = None,
                      donate: bool = True, rules: Optional[dict] = None,
-                     overlap_grads: Optional[bool] = None):
+                     overlap_grads: Optional[bool] = None,
+                     spec: Optional[StepSpec] = None):
     """-> (step_fn(state, batch) -> (state, metrics), in/out shardings)."""
+    if spec is None:
+        spec = StepSpec(plan=plan, donate=donate, rules=rules,
+                        overlap_grads=overlap_grads)
+    plan, donate, rules = spec.plan, spec.donate, spec.rules
+    overlap_grads = spec.overlap_grads
+    ddl = spec.ddl_for(tcfg)
     cfg = model.cfg
     sizes = mesh_axis_sizes(mesh)
     dpa = dp_axes(mesh)
@@ -378,7 +428,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
         # sunk tree at once: a pure host round trip). The m>1 shard path
         # never sinks: its accumulator is already 1/|data| flat on device.
         hooks = ddl_overlap.make_stack_hooks(
-            _stack_group_specs(pspecs), tcfg.ddl, data_axis="data",
+            _stack_group_specs(pspecs), ddl, data_axis="data",
             pod_axis=pod_axis, data_size=data_size, pod_size=pod_size,
             keep="shard" if m > 1 else "full",
             sink=(effective_kind("pinned_host")
@@ -414,7 +464,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
                     loc = ddl_overlap.collect_local_shards(
                         g, sspec, stacked, data_axis="data",
                         pod_axis=pod_axis, mean_over=mean_over,
-                        compress_dcn=tcfg.ddl.compress_dcn)
+                        compress_dcn=ddl.compress_dcn)
                     m_acc = compat.tree.map(jnp.add, m_acc, mets)
                     return (acc + loc, l_acc + l, m_acc), None
 
@@ -446,7 +496,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
         loss, metrics, grads = grads_of(params, batch)
         if not overlap:
             # DDL: post-hoc topology-aware reduction over the DP axes
-            grads, _ = ddl_reduce_tree(grads, tcfg.ddl, data_axis="data",
+            grads, _ = ddl_reduce_tree(grads, ddl, data_axis="data",
                                        pod_axis=pod_axis, data_size=data_size,
                                        pod_size=pod_size, param_specs=pspecs)
             if grads_host and opt_stream is not None:
@@ -465,7 +515,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh,
             # sweep; only the unscanned remainder goes through the tree pass
             stacks, rest = _split_stack_grads(grads)
             _, rest_specs = _split_stack_grads(pspecs)
-            rest, _ = ddl_reduce_tree(rest, tcfg.ddl, data_axis="data",
+            rest, _ = ddl_reduce_tree(rest, ddl, data_axis="data",
                                       pod_axis=pod_axis, data_size=data_size,
                                       pod_size=pod_size,
                                       param_specs=rest_specs)
@@ -574,7 +624,12 @@ class Zero1State(NamedTuple):
 
 def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
                            plan: Optional[MemoryPlan] = None,
-                           donate: bool = True):
+                           donate: bool = True,
+                           spec: Optional[StepSpec] = None):
+    if spec is None:
+        spec = StepSpec(plan=plan, donate=donate)
+    plan, donate = spec.plan, spec.donate
+    ddl = spec.ddl_for(tcfg)
     cfg = model.cfg
     sizes = mesh_axis_sizes(mesh)
     dpa = dp_axes(mesh)
@@ -596,7 +651,7 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
         stacked = _stacked_mask(shapes)
         sspec = ddl_overlap.shard_spec(shapes, data_size, stacked)
         hooks = ddl_overlap.make_stack_hooks(
-            _stack_group_specs(pspecs), tcfg.ddl, data_axis="data",
+            _stack_group_specs(pspecs), ddl, data_axis="data",
             pod_axis=pod_axis, data_size=data_size, pod_size=pod_size,
             keep="shard")
         pspec_obj = sspec
@@ -622,13 +677,13 @@ def build_zero1_train_step(model: Model, tcfg: TrainConfig, mesh,
             shard_g = ddl_overlap.collect_local_shards(
                 grads, sspec, stacked, data_axis="data", pod_axis=pod_axis,
                 mean_over=data_size * pod_size,
-                compress_dcn=tcfg.ddl.compress_dcn)
+                compress_dcn=ddl.compress_dcn)
         else:
             flat_g = pack(grads, pspec_obj)                  # [Npad] f32
             # DDL phases 1-2: my reduced shard
             shard_g, _ = hierarchical_reduce_scatter_flat(
                 flat_g, data_axis="data", pod_axis=pod_axis,
-                compress_dcn=tcfg.ddl.compress_dcn,
+                compress_dcn=ddl.compress_dcn,
                 mean_over=data_size * pod_size)
         loss = jax.lax.pmean(loss, dpa)
         gn_local = jnp.sum(shard_g.astype(jnp.float32) ** 2)
@@ -719,12 +774,16 @@ def init_zero1_state(model: Model, tcfg: TrainConfig, rng, data_size: int):
 # ---------------------------------------------------------------------------
 
 def build_prefill_step(model: Model, shape, mesh, plan=None,
-                       cache_len: Optional[int] = None):
+                       cache_len: Optional[int] = None,
+                       spec: Optional[StepSpec] = None):
     """cache_len: capacity of the emitted cache (>= shape.seq_len). Serving
     prefills into a decode-sized cache (prompt_len tokens, prompt+gen slots)
     — passing it here keeps the jitted prefill the ONE prefill path instead
     of every caller re-jitting its own."""
-    cache_len = cache_len or shape.seq_len
+    if spec is None:
+        spec = StepSpec(plan=plan, cache_len=cache_len)
+    plan = spec.plan
+    cache_len = spec.cache_len or shape.seq_len
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
@@ -755,7 +814,10 @@ def build_prefill_step(model: Model, shape, mesh, plan=None,
 
 
 def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
-                      rules=None):
+                      rules=None, spec: Optional[StepSpec] = None):
+    if spec is None:
+        spec = StepSpec(plan=plan, donate=donate, rules=rules)
+    plan, donate, rules = spec.plan, spec.donate, spec.rules
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
@@ -785,7 +847,8 @@ def build_decode_step(model: Model, shape, mesh, plan=None, donate=True,
 
 
 def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
-                           rules=None, kv_dtype: str = "model", arena=None):
+                           rules=None, kv_dtype: str = "model", arena=None,
+                           spec: Optional[StepSpec] = None):
     """Fixed-shape slot-batched decode step for the continuous-batching
     serve engine: `shape.global_batch` is the SLOT count, `shape.seq_len`
     the per-slot cache capacity. Each call advances every active slot one
@@ -814,6 +877,14 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     new_cache), params_sh, batch_sh, cache_sh). positions [B] int32 per-slot
     decode positions; active [B] bool slot-occupancy mask (inactive rows
     compute garbage but their cache rows are held byte-stable)."""
+    if spec is None:
+        # NB the legacy kwarg default is an EXPLICIT "model", preserving the
+        # old behavior exactly; plan-resolution needs spec.kv_dtype=None
+        spec = StepSpec(plan=plan, donate=donate, rules=rules,
+                        kv_dtype=kv_dtype, arena=arena)
+    plan, donate, rules = spec.plan, spec.donate, spec.rules
+    arena = spec.arena
+    kv_dtype = spec.resolved_kv_dtype()
     _, pspecs = model.abstract_params(mesh)
     residency = (plan.residency if plan else {})
     p_kind = effective_kind("pinned_host") if residency.get("params") == "host" else None
@@ -832,7 +903,7 @@ def build_slot_decode_step(model: Model, shape, mesh, plan=None, donate=True,
     # whatever the plan says about the kvcache CLASS (which covers the
     # spilled backlog, not the active working set)
     cavals, cspecs = model.cache_abstract(shape, mesh, rules=rules)
-    if kvquant.validate_kv_dtype(kv_dtype) == "int8":
+    if kvquant.is_int8(kv_dtype):
         cavals, cspecs = kvquant.quantize_cache_abstract(
             cavals, cspecs, shape.seq_len)
     if arena is not None:

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.config.base import TrainConfig
-from repro.core.lms.planner import plan_memory
+from repro.core.lms.planner import PlanRequest, plan as plan_lms
 from repro.data import DataLoader, SyntheticTokens, make_vlm_batch, make_audio_batch
 from repro.launch.mesh import make_mesh, mesh_axis_sizes
 from repro.models.model import Model
@@ -38,7 +38,8 @@ class Trainer:
     def __init__(self, tcfg: TrainConfig, *, attn_impl: str = "blockwise",
                  process: int = 0, heartbeat_dir: Optional[str] = None,
                  injector=None, obs: Optional[Obs] = None,
-                 telemetry: Optional[TelemetryLoop] = None):
+                 telemetry: Optional[TelemetryLoop] = None,
+                 profile=None):
         self.tcfg = tcfg
         # private registry over the shared span ring (same pattern as the
         # serve engine); a supplied telemetry loop records its alerts here
@@ -48,9 +49,13 @@ class Trainer:
             telemetry.obs = self.obs
         self.mesh = make_mesh(tcfg.mesh)
         self.model = Model(tcfg.model, attn_impl=attn_impl)
-        self.plan = (plan_memory(tcfg.model, tcfg.shape, tcfg.mesh, tcfg.lms,
-                                 zero1=(tcfg.ddl.mode == "zero1"),
-                                 microbatches=tcfg.microbatches)
+        # profile: a Planner v2 calibration source (obs_report.json path,
+        # loaded dict, or CostModel) — None plans from hardware constants
+        self.plan = (plan_lms(PlanRequest(
+                        cfg=tcfg.model, shape=tcfg.shape, mesh=tcfg.mesh,
+                        lms=tcfg.lms, optimizer=tcfg.optimizer,
+                        zero1=(tcfg.ddl.mode == "zero1"),
+                        microbatches=tcfg.microbatches), profile=profile)
                      if tcfg.lms.enabled else None)
         self.process = process
         self._inj = injector

@@ -1,0 +1,217 @@
+"""Planner v2 (DESIGN.md §13): profile-calibrated planning behind the
+unified `plan(PlanRequest, profile=)` facade.
+
+The committed fixture `tests/fixtures/obs_report.json` is a DEGRADED
+profile — 1 MB/s achieved kvcache bandwidth, 0.25 overlap — so the
+calibrated decisions it forces (offload flipped to remat, deeper
+prefetch, sized DDL buckets) are deterministic, not runner-dependent."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.config.base import (SHAPES, SINGLE_POD, DDLConfig, LMSConfig,
+                               ShapeConfig, TrainConfig)
+from repro.configs import get_config, get_smoke_config
+from repro.core.lms.costmodel import (CostModel, validate_analysis_report,
+                                      validate_obs_report)
+from repro.core.lms.planner import (OPT_STATE_MULT, PlanRequest,
+                                    check_schedule_invariant,
+                                    hbm_traffic_model, plan, plan_memory,
+                                    plan_serve_memory, validate_optimizer)
+from repro.train.steps import StepSpec
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "obs_report.json")
+ARCH = "qwen2.5-14b"
+
+
+def _fixture_report():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+# ---- CostModel loading ----------------------------------------------------
+
+def test_costmodel_from_fixture():
+    cost = CostModel.load(FIXTURE)
+    assert cost.calibrated
+    assert cost.bw("kvcache") == pytest.approx(1e6)
+    # params row is trace-only (bytes_per_s null): priced at the aggregate,
+    # which the fixture pins to exactly 1 MB/s
+    assert cost.bw("params") == pytest.approx(1e6)
+    assert cost.hidden_frac() == pytest.approx(0.25)
+    assert cost.mean_step_s == pytest.approx(0.01)
+
+
+def test_costmodel_uncalibrated_is_hardware():
+    from repro import hw as hwlib
+    cost = CostModel.from_hardware(hwlib.TPU_V5E)
+    assert not cost.calibrated
+    assert cost.bw("params") == hwlib.TPU_V5E.host_bw
+    assert cost.hidden_frac() == 1.0
+    assert cost.live_margin("train") == 0
+
+
+def test_loader_validation_errors():
+    with pytest.raises(ValueError):
+        validate_obs_report({"schema": 99, "overlap_frac": 0.0,
+                             "classes": {}})
+    with pytest.raises(ValueError):
+        validate_obs_report({"schema": 1, "classes": {}})  # no overlap_frac
+    with pytest.raises(ValueError):
+        validate_obs_report({"schema": 1, "overlap_frac": 0.0,
+                             "classes": {"kvcache": {}}})  # row sans bytes
+    with pytest.raises(ValueError):
+        validate_analysis_report({"lint": []})  # no steps
+
+
+def test_live_margin_from_analysis_report():
+    analysis = {"steps": [
+        {"name": "train_step", "plan_delta_bytes": 1 << 20},
+        {"name": "zero1_train_step", "plan_delta_bytes": 3 << 20},
+        {"name": "decode_step", "plan_delta_bytes": -(1 << 20)},
+    ]}
+    cost = CostModel.from_reports(_fixture_report(), analysis)
+    assert cost.live_margin("train") == 3 << 20   # max over matching steps
+    assert cost.live_margin("decode") == 0        # negative deltas clamp
+
+
+# ---- facade / wrapper identity -------------------------------------------
+
+def test_plan_memory_wrapper_identity():
+    cfg = get_config(ARCH)
+    shape = SHAPES["train_4k"]
+    legacy = plan_memory(cfg, shape, SINGLE_POD, LMSConfig())
+    facade = plan(PlanRequest(cfg=cfg, shape=shape, mesh=SINGLE_POD,
+                              lms=LMSConfig()))
+    assert legacy == facade
+    assert not facade.calibrated
+
+
+def test_plan_serve_wrapper_identity():
+    cfg = get_config(ARCH)
+    shape = SHAPES["decode_32k"]
+    legacy = plan_serve_memory(cfg, shape, SINGLE_POD, slots=8, page_size=64)
+    facade = plan(PlanRequest(cfg=cfg, shape=shape, mesh=SINGLE_POD,
+                              serve=True, slots=8, page_size=64))
+    assert legacy == facade
+
+
+# ---- calibrated replanning -----------------------------------------------
+
+def test_degraded_profile_flips_offload_to_remat():
+    cfg = get_config(ARCH)
+    shape = SHAPES["train_4k"]
+    req = PlanRequest(cfg=cfg, shape=shape, mesh=SINGLE_POD, lms=LMSConfig())
+    static = plan(req)
+    cal = plan(req, profile=FIXTURE)
+    assert cal.calibrated and not static.calibrated
+    # 1 MB/s measured bandwidth makes swapping activations absurd: at least
+    # one class the static plan offloads must flip to remat
+    flipped = [n for n, v in cal.assignment.items()
+               if static.assignment.get(n) == "offload" and v == "remat"]
+    assert flipped, (static.assignment, cal.assignment)
+    assert cal.fits, cal.summary()
+    # determinism: same profile, same plan
+    assert plan(req, profile=FIXTURE) == cal
+
+
+def test_calibrated_schedule_tuning():
+    cfg = get_config(ARCH)
+    req = PlanRequest(cfg=cfg, shape=SHAPES["train_4k"], mesh=SINGLE_POD,
+                      lms=LMSConfig())
+    cal = plan(req, profile=FIXTURE)
+    sched = cal.swap_schedule
+    assert sched is not None and sched.stream
+    # the tuned depth must divide the layer count (the streamed scan
+    # regroups into L/depth blocks) and the deeper buffers still fit
+    assert cfg.num_layers % sched.prefetch_depth == 0
+    assert sched.prefetch_depth > 2  # 1 MB/s demands a deeper window
+    assert cal.fits
+    # DDL bucket sized from measured backward-layer time: a power of two
+    # inside the executor's clamp range
+    assert cal.tuned_bucket_mb is not None
+    assert 8 <= cal.tuned_bucket_mb <= 256
+    assert cal.tuned_bucket_mb & (cal.tuned_bucket_mb - 1) == 0
+
+
+def test_uncalibrated_plan_has_no_tuning_fields():
+    cal = plan(PlanRequest(cfg=get_config(ARCH), shape=SHAPES["train_4k"],
+                           mesh=SINGLE_POD, lms=LMSConfig()))
+    assert cal.tuned_bucket_mb is None
+    assert not cal.calibrated
+
+
+def test_calibrated_streamed_plan_passes_invariant():
+    cfg = get_smoke_config("olmo-1b")
+    shape = ShapeConfig("t", "train", 32, 2)
+    mesh = dataclasses.replace(SINGLE_POD, shape=(1, 1))
+    base = plan(PlanRequest(cfg=cfg, shape=shape, mesh=mesh,
+                            lms=LMSConfig()))
+    tight = LMSConfig(hbm_budget=max(base.peak_bytes // 8, 1 << 20))
+    cal = plan(PlanRequest(cfg=cfg, shape=shape, mesh=mesh, lms=tight),
+               profile=FIXTURE)
+    assert cal.calibrated
+    sched = cal.swap_schedule
+    assert sched is not None and sched.stream
+    check_schedule_invariant(cal.residency, sched)  # must not raise
+
+
+# ---- optimizer validation (the raw string-compare bugfix) ----------------
+
+def test_validate_optimizer_rejects_unknown():
+    with pytest.raises(ValueError, match="sgdm"):
+        validate_optimizer("sgd")
+    assert validate_optimizer("adamw") == "adamw"
+    assert set(OPT_STATE_MULT) == {"adamw", "sgdm"}
+
+
+def test_plan_memory_rejects_unknown_optimizer():
+    cfg = get_config(ARCH)
+    with pytest.raises(ValueError):
+        plan_memory(cfg, SHAPES["train_4k"], SINGLE_POD, LMSConfig(),
+                    optimizer="adam")
+    good = plan_memory(cfg, SHAPES["train_4k"], SINGLE_POD, LMSConfig(),
+                       optimizer="sgdm")
+    with pytest.raises(ValueError):
+        hbm_traffic_model(cfg, SHAPES["train_4k"], SINGLE_POD, good,
+                          optimizer="rmsprop")
+
+
+# ---- StepSpec ------------------------------------------------------------
+
+def test_stepspec_kv_dtype_resolution():
+    assert StepSpec().resolved_kv_dtype() == "model"
+    assert StepSpec(kv_dtype="int8").resolved_kv_dtype() == "int8"
+    with pytest.raises(ValueError):
+        StepSpec(kv_dtype="fp4").resolved_kv_dtype()
+    # the plan's priced knob fills in only when the arg is unset
+    cfg = get_config(ARCH)
+    sp = plan_serve_memory(cfg, SHAPES["decode_32k"], SINGLE_POD,
+                           slots=8, page_size=64, kv_dtype="int8")
+    if sp.kv_paging is not None:
+        assert StepSpec(plan=sp).resolved_kv_dtype() == "int8"
+        assert StepSpec(plan=sp,
+                        kv_dtype="model").resolved_kv_dtype() == "model"
+
+
+def test_stepspec_ddl_resolution():
+    cfg = get_config(ARCH)
+    req = PlanRequest(cfg=cfg, shape=SHAPES["train_4k"], mesh=SINGLE_POD,
+                      lms=LMSConfig())
+    cal = plan(req, profile=FIXTURE)
+    assert cal.tuned_bucket_mb is not None
+    tcfg_auto = TrainConfig(model=cfg, shape=SHAPES["train_4k"],
+                            mesh=SINGLE_POD, ddl=DDLConfig())
+    tcfg_expl = TrainConfig(model=cfg, shape=SHAPES["train_4k"],
+                            mesh=SINGLE_POD, ddl=DDLConfig(bucket_mb=32))
+    # auto bucket + calibrated plan -> the tuned size; explicit wins;
+    # an uncalibrated plan leaves auto untouched
+    assert StepSpec(plan=cal).ddl_for(tcfg_auto).bucket_mb == \
+        cal.tuned_bucket_mb
+    assert StepSpec(plan=cal).ddl_for(tcfg_expl).bucket_mb == 32
+    uncal = plan(req)
+    assert StepSpec(plan=uncal).ddl_for(tcfg_auto).bucket_mb is None
+    assert StepSpec().ddl_for(tcfg_auto).bucket_mb is None
